@@ -1,0 +1,29 @@
+"""Shared benchmark helpers: wall-clock timing of jitted callables."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+__all__ = ["time_fn", "row"]
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock microseconds per call of a jitted function."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line, flush=True)
+    return line

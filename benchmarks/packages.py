@@ -1,0 +1,58 @@
+"""Paper Fig. 10 analog: this solver vs a GraKeL-style CPU baseline.
+
+The baseline is what GraKeL/GraphKernels do for the random-walk family:
+build the EXPLICIT nm x nm product system per pair and solve it with a
+dense direct method on the CPU (numpy/LAPACK, single core — paper gives
+GraphKernels 1 core, GraKeL 4). Ours is the batched on-the-fly CG solver
+under XLA jit on the same CPU. On the target v5e the gap widens by the
+accelerator factor; the derived column reports pairs/s for both.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import KroneckerDelta, SquareExponential, \
+    batch_from_graphs, mgk_pairs
+from repro.core.reference import mgk_direct
+from repro.data import make_synthetic_dataset
+from .common import row, time_fn
+
+VK = KroneckerDelta(0.5, n_labels=8)
+EK = SquareExponential(1.0, rank=12)
+
+
+def run(n_graphs: int = 12, n_nodes: int = 32) -> list[str]:
+    gs = make_synthetic_dataset("nws", n_graphs=n_graphs, n_nodes=n_nodes,
+                                seed=0)
+    pairs = [(i, j) for i in range(n_graphs) for j in range(i, n_graphs)]
+
+    # GraKeL-style explicit baseline (time a subset, extrapolate)
+    sub = pairs[:12]
+    t0 = time.perf_counter()
+    for i, j in sub:
+        mgk_direct(gs[i], gs[j], VK, EK)
+    t_explicit = (time.perf_counter() - t0) / len(sub)
+
+    # ours: batched, jitted, on-the-fly low-rank XMV
+    A = batch_from_graphs([gs[i] for i, _ in pairs], pad_to=n_nodes)
+    B = batch_from_graphs([gs[j] for _, j in pairs], pad_to=n_nodes)
+    us_batch = time_fn(lambda a, b: mgk_pairs(a, b, VK, EK,
+                                              method="lowrank",
+                                              tol=1e-8).values,
+                       A, B, iters=3)
+    t_ours = us_batch / 1e6 / len(pairs)
+
+    speedup = t_explicit / t_ours
+    out = [
+        row("packages_explicit_cpu_per_pair", t_explicit * 1e6,
+            f"pairs_per_s={1 / t_explicit:.1f}"),
+        row("packages_ours_per_pair", t_ours * 1e6,
+            f"pairs_per_s={1 / t_ours:.1f};speedup={speedup:.1f}x"),
+    ]
+    return out
+
+
+if __name__ == "__main__":
+    run()

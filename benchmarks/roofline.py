@@ -1,0 +1,75 @@
+"""§Roofline table generator: reads the dry-run JSON records and emits
+the per-(arch x shape x mesh) three-term roofline table (markdown + CSV).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from .common import row
+
+HEADERS = ["arch", "shape", "mesh", "variant", "compute_s", "memory_s",
+           "collective_s", "dominant", "model_flops_ratio"]
+
+
+def load(dir_: str) -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs: list[dict]) -> str:
+    lines = ["| " + " | ".join(HEADERS) + " |",
+             "|" + "---|" * len(HEADERS)]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"],
+                                         r.get("variant", ""))):
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"{r.get('variant', '')} | skip | skip | skip | "
+                         f"— | — |")
+            continue
+        if r.get("status") != "ok":
+            continue
+        ro = r["roofline"]
+        mfr = ro.get("model_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('variant', '')} | {ro['compute_s']:.3e} | "
+            f"{ro['memory_s']:.3e} | {ro['collective_s']:.3e} | "
+            f"{ro['dominant'][:-2]} | "
+            f"{'—' if mfr is None else f'{mfr:.2f}'} |")
+    return "\n".join(lines)
+
+
+def run(dir_: str = "results/dryrun") -> list[str]:
+    recs = [r for r in load(dir_) if r.get("status") == "ok"]
+    out = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"],
+                                         r["mesh"])):
+        ro = r["roofline"]
+        dom_val = ro[ro["dominant"]]
+        out.append(row(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+            f"_{r.get('variant', 'baseline')}",
+            dom_val * 1e6,
+            f"dominant={ro['dominant'][:-2]};compute={ro['compute_s']:.2e};"
+            f"memory={ro['memory_s']:.2e};"
+            f"collective={ro['collective_s']:.2e}"))
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    a = ap.parse_args()
+    if a.markdown:
+        print(table(load(a.dir)))
+    else:
+        run(a.dir)

@@ -1,0 +1,29 @@
+"""Benchmark driver — one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV (plus a roofline section read from the
+dry-run records if present).
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import primitives, reorder_bench, adaptive, incremental, \
+        packages, roofline
+    primitives.run()          # paper Fig. 5 / Table I
+    reorder_bench.run()       # paper Figs. 6-7
+    adaptive.run()            # paper Fig. 8
+    incremental.run()         # paper Fig. 9
+    packages.run()            # paper Fig. 10
+    if os.path.isdir("results/dryrun"):
+        roofline.run("results/dryrun")   # EXPERIMENTS §Roofline source
+
+
+if __name__ == "__main__":
+    main()

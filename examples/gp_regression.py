@@ -1,0 +1,47 @@
+"""Kernel-based learning on graphs (the paper's motivating application):
+kernel ridge regression of a synthetic molecular property using the
+marginalized graph kernel Gram matrix.
+
+    PYTHONPATH=src python examples/gp_regression.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.core import KroneckerDelta, SquareExponential
+from repro.data import bucket_graphs, make_drugbank_like_dataset
+from repro.distributed import GramDriver
+
+
+def main():
+    graphs = [g for g in make_drugbank_like_dataset(40, seed=1)
+              if 5 <= g.n_nodes <= 48][:28]
+    # synthetic target: label composition (what a vertex-label-aware
+    # graph kernel can actually see)
+    y = np.array([np.mean(g.vertex_labels == 0) for g in graphs])
+
+    ds = bucket_graphs(graphs, max_buckets=3)
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+    K = GramDriver(ds, mesh, KroneckerDelta(0.5, 8),
+                   SquareExponential(1.0, rank=12),
+                   pairs_per_block=32).run()
+
+    n_train = 20
+    idx = np.random.default_rng(0).permutation(len(graphs))
+    tr, te = idx[:n_train], idx[n_train:]
+    lam = 1e-4
+    alpha = np.linalg.solve(K[np.ix_(tr, tr)] + lam * np.eye(n_train),
+                            y[tr])
+    pred = K[np.ix_(te, tr)] @ alpha
+    mae = np.abs(pred - y[te]).mean()
+    base = np.abs(y[tr].mean() - y[te]).mean()
+    print(f"kernel ridge MAE {mae:.4f} vs mean-predictor {base:.4f} "
+          f"({base / mae:.1f}x better)")
+    assert mae < base
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""End-to-end production pipeline: reorder -> bucket -> schedule ->
+sharded batched solve -> checkpointed Gram matrix, with a simulated
+mid-run crash + restart (fault tolerance demo).
+
+    PYTHONPATH=src python examples/gram_pipeline.py
+"""
+import sys, os, tempfile
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.core import KroneckerDelta, SquareExponential, best_order
+from repro.data import bucket_graphs, make_drugbank_like_dataset
+from repro.distributed import ChunkStore, GramDriver
+
+
+def main():
+    graphs = [g for g in make_drugbank_like_dataset(24, seed=3)
+              if g.n_nodes >= 4][:16]
+    # production preprocessing: per-graph reordering for octile density
+    reordered = []
+    for g in graphs:
+        perm, name, tiles = best_order(g.adjacency)
+        reordered.append(g.permuted(perm))
+    ds = bucket_graphs(reordered, max_buckets=3)
+    print(f"{len(ds)} graphs in {len(ds.buckets)} buckets:",
+          [(b.pad_to, len(b.indices)) for b in ds.buckets])
+
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+    with tempfile.TemporaryDirectory() as ckpt:
+        store = ChunkStore(ckpt)
+        drv = GramDriver(ds, mesh, KroneckerDelta(0.5, 8),
+                         SquareExponential(1.0, rank=12), store=store,
+                         pairs_per_block=24)
+        plan = drv.plan()
+        print(f"{len(drv.blocks())} pair-blocks, makespan ratio "
+              f"{plan.makespan_ratio:.2f}")
+
+        # simulate a crash: run a few blocks "before the failure"
+        from repro.distributed.gram import gram_pair_step, solve_pair_block
+        step = gram_pair_step(mesh, drv.vertex_kernel, drv.edge_kernel)
+        for blk in drv.blocks()[:3]:
+            store.save_block(blk.block_id,
+                             **solve_pair_block(ds, blk, step, 1))
+        print(f"'crash' after {len(store.done_blocks())} blocks; "
+              "restarting...")
+
+        K = drv.run(progress=lambda i, n: None)   # resumes, no recompute
+        print("Gram complete:", K.shape, "min eig",
+              np.linalg.eigvalsh(K).min().round(6))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: marginalized graph kernel between two molecules, then a
+small normalized Gram matrix.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import (KroneckerDelta, SquareExponential,
+                        batch_from_graphs, mgk_pairs)
+from repro.data import make_drugbank_like_dataset
+
+
+def main():
+    graphs = [g for g in make_drugbank_like_dataset(12, seed=0)
+              if g.n_nodes >= 5][:6]
+    vk = KroneckerDelta(h=0.5, n_labels=8)      # element identity
+    ek = SquareExponential(alpha=1.0, rank=12)  # bond-length similarity
+
+    # one pair, with the node-wise similarity map (paper Sec. I)
+    a = batch_from_graphs(graphs[:1])
+    b = batch_from_graphs(graphs[1:2], pad_to=a.padded_nodes) \
+        if a.padded_nodes >= graphs[1].n_nodes else batch_from_graphs(graphs[1:2])
+    a = batch_from_graphs(graphs[:1], pad_to=max(a.padded_nodes, b.padded_nodes))
+    b = batch_from_graphs(graphs[1:2], pad_to=a.padded_nodes)
+    res = mgk_pairs(a, b, vk, ek, return_nodal=True)
+    print(f"K(G0, G1) = {float(res.values[0]):.6f} "
+          f"({int(res.iterations[0])} CG iterations)")
+    print("nodal similarity block:\n",
+          np.asarray(res.nodal[0])[:4, :4].round(4))
+
+    # small all-pairs normalized Gram matrix
+    n = len(graphs)
+    pad = max(g.n_nodes for g in graphs)
+    pairs = [(i, j) for i in range(n) for j in range(i, n)]
+    A = batch_from_graphs([graphs[i] for i, _ in pairs], pad_to=pad)
+    B = batch_from_graphs([graphs[j] for _, j in pairs], pad_to=pad)
+    vals = np.asarray(mgk_pairs(A, B, vk, ek).values)
+    K = np.zeros((n, n))
+    for (i, j), v in zip(pairs, vals):
+        K[i, j] = K[j, i] = v
+    d = np.sqrt(np.diag(K))
+    K = K / d[:, None] / d[None, :]
+    print("normalized Gram:\n", K.round(3))
+    print("min eigenvalue:", np.linalg.eigvalsh(K).min().round(6))
+
+
+if __name__ == "__main__":
+    main()

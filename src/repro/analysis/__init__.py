@@ -1,0 +1,5 @@
+"""Static analysis of compiled HLO: loop-trip-corrected flops / bytes /
+collective traffic (the dry-run profile that feeds §Roofline)."""
+from .hlo_cost import analyze_hlo, HloCost
+
+__all__ = ["analyze_hlo", "HloCost"]

@@ -1,0 +1,20 @@
+"""Config registry: the 10 assigned architectures + the paper's own
+graph-kernel workload, selectable via --arch <id>."""
+from .base import MLAConfig, ModelConfig, MoEConfig, SSMConfig
+from .shapes import SHAPES, ShapeCell, batch_specs, input_specs, \
+    is_applicable, skip_reason
+
+from . import (deepseek_v3_671b, gemma3_12b, jamba_1_5_large_398b,
+               llama_3_2_vision_90b, mamba2_2_7b, phi4_mini_3_8b,
+               qwen3_0_6b, qwen3_14b, qwen3_moe_235b_a22b, whisper_large_v3)
+
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.arch_id: m.CONFIG
+    for m in (phi4_mini_3_8b, qwen3_14b, qwen3_0_6b, gemma3_12b,
+              qwen3_moe_235b_a22b, deepseek_v3_671b, llama_3_2_vision_90b,
+              whisper_large_v3, mamba2_2_7b, jamba_1_5_large_398b)
+}
+
+__all__ = ["MLAConfig", "ModelConfig", "MoEConfig", "SSMConfig", "SHAPES",
+           "ShapeCell", "batch_specs", "input_specs", "is_applicable",
+           "skip_reason", "ARCHS"]

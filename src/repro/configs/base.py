@@ -1,0 +1,199 @@
+"""Model / run configuration dataclasses for the architecture zoo.
+
+Every assigned architecture instantiates :class:`ModelConfig` with the
+exact published numbers (see per-arch modules); smoke tests call
+``cfg.reduced()`` for a tiny same-family variant.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+__all__ = ["MoEConfig", "MLAConfig", "SSMConfig", "ModelConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                  # per-expert FFN hidden dim
+    n_shared: int = 0              # shared (always-on) experts
+    capacity_factor: float = 1.25
+    moe_every: int = 1             # MoE MLP every k-th layer (jamba: 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256               # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # attention flavor
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    sliding_window: int | None = None      # window size for local layers
+    local_global_ratio: int | None = None  # gemma3: local layers per global
+    attn_every: int | None = None          # jamba: attention each k-th layer
+    cross_attn_every: int | None = None    # llama-vision: cross each k-th
+    vision_tokens: int = 0                 # vlm stub frontend token count
+    encoder_layers: int = 0                # whisper enc-dec
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = False
+
+    moe: MoEConfig | None = None
+    n_dense_layers: int = 0                # deepseek: leading dense layers
+    mla: MLAConfig | None = None
+    ssm: SSMConfig | None = None
+    mtp_heads: int = 0                     # deepseek multi-token prediction
+
+    # numerics / memory
+    dtype: str = "bfloat16"
+    remat: Literal["none", "full", "dots"] = "full"
+    attention_impl: Literal["reference", "pallas"] = "reference"
+    fsdp: bool = False                     # shard params over data axis too
+    optimizer: Literal["adamw", "adafactor", "adamw8bit"] = "adamw"
+
+    # notes for DESIGN/EXPERIMENTS bookkeeping
+    source: str = ""
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up so the embedding shards on any mesh axis."""
+        return -(-self.vocab_size // 1024) * 1024
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def n_params(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for the
+        MODEL_FLOPS roofline line and memory napkin math."""
+        p = self.vocab_padded * self.d_model          # embed
+        if not self.tie_embeddings:
+            p += self.vocab_padded * self.d_model     # lm head
+        total_layers = self.n_layers + self.encoder_layers
+        for i in range(total_layers):
+            p += self._layer_params(i)
+        if self.mtp_heads:
+            p += self.mtp_heads * self._layer_params(self.n_layers - 1)
+        return p
+
+    def _is_attn_layer(self, i: int) -> bool:
+        if self.family in ("ssm",):
+            return False
+        if self.attn_every:
+            return i % self.attn_every == 0
+        return True
+
+    def _is_moe_layer(self, i: int) -> bool:
+        if self.moe is None or i < self.n_dense_layers:
+            return False
+        return (i % self.moe.moe_every) == (self.moe.moe_every - 1) \
+            if self.moe.moe_every > 1 else True
+
+    def _layer_params(self, i: int) -> int:
+        d = self.d_model
+        p = 2 * d                                     # norms
+        if self._is_attn_layer(i):
+            if self.mla is not None:
+                c = self.mla
+                qh = c.qk_nope_dim + c.qk_rope_dim
+                p += d * c.q_lora_rank + c.q_lora_rank * self.n_heads * qh
+                p += d * (c.kv_lora_rank + c.qk_rope_dim)
+                p += c.kv_lora_rank * self.n_heads * (c.qk_nope_dim +
+                                                      c.v_head_dim)
+                p += self.n_heads * c.v_head_dim * d
+            else:
+                p += d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        elif self.ssm is not None:
+            s = self.ssm
+            d_in = s.expand * d
+            h = d_in // s.head_dim
+            p += d * (2 * d_in + 2 * s.d_state + h)   # in_proj (x,z,B,C,dt)
+            p += d_in * s.conv_width + h + h          # conv, A_log, D
+            p += d_in * d                             # out_proj
+        if self._is_moe_layer(i):
+            m = self.moe
+            p += d * m.n_experts                      # router
+            p += (m.n_experts + m.n_shared) * 3 * d * m.d_expert
+        else:
+            p += 3 * d * self.d_ff                    # swiglu
+        return p
+
+    def n_active_params(self) -> int:
+        """Active-per-token parameters (MoE: only top_k + shared experts)."""
+        if self.moe is None:
+            return self.n_params()
+        p = self.n_params()
+        m = self.moe
+        n_moe_layers = sum(self._is_moe_layer(i)
+                           for i in range(self.n_layers))
+        inactive = (m.n_experts - m.top_k) * 3 * self.d_model * m.d_expert
+        return p - n_moe_layers * inactive
+
+    def reduced(self) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        changes: dict = dict(
+            n_layers=max(2, min(4, self.n_layers)),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.mla is None else 4,
+            head_dim=32,
+            d_ff=256,
+            vocab_size=512,
+            vision_tokens=16 if self.vision_tokens else 0,
+            encoder_layers=2 if self.encoder_layers else 0,
+            remat="none",
+            dtype="float32",
+            n_dense_layers=1 if self.n_dense_layers else 0,
+            mtp_heads=min(self.mtp_heads, 1),
+        )
+        if self.moe is not None:
+            # capacity_factor E/k makes the reduced config DROPLESS so the
+            # prefill+decode == full-forward consistency tests are exact
+            changes["moe"] = dataclasses.replace(
+                self.moe, n_experts=4, top_k=2, d_expert=64,
+                n_shared=min(self.moe.n_shared, 1), capacity_factor=2.0)
+        if self.mla is not None:
+            changes["mla"] = MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                                       qk_nope_dim=16, qk_rope_dim=16,
+                                       v_head_dim=32)
+        if self.ssm is not None:
+            changes["ssm"] = dataclasses.replace(
+                self.ssm, d_state=16, head_dim=16, chunk=16)
+        if self.attn_every:
+            changes["n_layers"] = self.attn_every  # one full superblock
+        if self.local_global_ratio:
+            changes["n_layers"] = self.local_global_ratio + 1
+            changes["sliding_window"] = 8
+        if self.cross_attn_every:
+            changes["n_layers"] = self.cross_attn_every
+        return dataclasses.replace(self, **changes)

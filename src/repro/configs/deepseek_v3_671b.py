@@ -1,0 +1,25 @@
+"""deepseek-v3-671b [moe] — 61L d7168 128H d_expert=2048 vocab=129280;
+MLA (q_lora 1536, kv_lora 512, rope 64), 1 shared + 256 routed top-8, MTP,
+first 3 layers dense (d_ff 18432). [arXiv:2412.19437; hf]"""
+from .base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,     # nominal (MLA replaces GQA; latent cache rank 512)
+    head_dim=128,
+    d_ff=18432,         # the 3 leading dense layers
+    vocab_size=129280,
+    rope_theta=10_000.0,
+    moe=MoEConfig(n_experts=256, top_k=8, d_expert=2048, n_shared=1),
+    n_dense_layers=3,
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, qk_nope_dim=128,
+                  qk_rope_dim=64, v_head_dim=128),
+    mtp_heads=1,
+    optimizer="adafactor",
+    fsdp=True,
+    source="arXiv:2412.19437; hf",
+)

@@ -1,0 +1,22 @@
+"""gemma3-12b [dense] — 48L d3840 16H (GQA kv=8) d_ff=15360 vocab=262144.
+5:1 local:global attention interleave (sliding window 1024), 128k context,
+head_dim 256. Single rope_theta simplification documented in DESIGN.md.
+[hf:google/gemma-3-1b-pt; unverified]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="gemma3-12b",
+    family="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=256,
+    d_ff=15360,
+    vocab_size=262144,
+    rope_theta=1_000_000.0,
+    sliding_window=1024,
+    local_global_ratio=5,
+    tie_embeddings=True,
+    source="hf:google/gemma-3-1b-pt; unverified",
+)

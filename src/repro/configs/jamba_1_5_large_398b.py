@@ -1,0 +1,24 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d8192 64H (GQA kv=8) d_ff=24576
+vocab=65536; attn:mamba 1:7 interleave, MoE 16 experts top-2 every other
+layer. SSM blocks use Mamba-2 SSD (adaptation noted in DESIGN.md).
+[arXiv:2403.19887; hf]"""
+from .base import ModelConfig, MoEConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    arch_id="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    rope_theta=10_000.0,
+    attn_every=8,
+    moe=MoEConfig(n_experts=16, top_k=2, d_expert=24576, moe_every=2),
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, conv_width=4,
+                  chunk=256),
+    fsdp=True,
+    source="arXiv:2403.19887; hf",
+)

@@ -1,0 +1,23 @@
+"""llama-3.2-vision-90b [vlm] — 100L d8192 64H (GQA kv=8) d_ff=28672
+vocab=128256; cross-attention image layers every 5th layer (20 of 100).
+Vision frontend is a STUB: input_specs provides pre-projected patch
+embeddings [B, 1600, d_model]. [hf:meta-llama/Llama-3.2-11B-Vision;
+unverified]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    cross_attn_every=5,
+    vision_tokens=1600,
+    fsdp=True,
+    source="hf:meta-llama/Llama-3.2-11B-Vision; unverified",
+)

@@ -1,0 +1,18 @@
+"""mamba2-2.7b [ssm] — 64L d2560, attn-free, ssm_state=128, SSD.
+[arXiv:2405.21060; unverified]"""
+from .base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    arch_id="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    n_heads=1,              # unused (attention-free)
+    n_kv_heads=1,
+    head_dim=1,
+    d_ff=0,                 # no MLP: the mamba block IS the layer
+    vocab_size=50280,
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, conv_width=4,
+                  chunk=256),
+    source="arXiv:2405.21060; unverified",
+)

@@ -1,0 +1,20 @@
+"""qwen3-0.6b [dense] — 28L d1024 16H (GQA kv=8) d_ff=3072 vocab=151936.
+qk_norm; Qwen3 fixes head_dim=128 independent of d_model.
+[hf:Qwen/Qwen3-8B; hf]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen3-0.6b",
+    family="dense",
+    n_layers=28,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=3072,
+    vocab_size=151936,
+    rope_theta=1_000_000.0,
+    qk_norm=True,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen3-8B; hf",
+)

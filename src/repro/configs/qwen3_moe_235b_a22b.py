@@ -1,0 +1,19 @@
+"""qwen3-moe-235b-a22b [moe] — 94L d4096 64H (GQA kv=4) expert_ff=1536
+vocab=151936; 128 experts top-8. [hf:Qwen/Qwen3-30B-A3B; hf]"""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,          # per-expert FFN width (all MLPs are MoE)
+    vocab_size=151936,
+    rope_theta=1_000_000.0,
+    qk_norm=True,
+    moe=MoEConfig(n_experts=128, top_k=8, d_expert=1536),
+    source="hf:Qwen/Qwen3-30B-A3B; hf",
+)

@@ -1,0 +1,85 @@
+"""Assigned input shapes and their ShapeDtypeStruct input specs.
+
+The four LM shape cells (tasking spec):
+  train_4k     seq 4,096    global_batch 256   -> train_step
+  prefill_32k  seq 32,768   global_batch 32    -> serve prefill
+  decode_32k   seq 32,768   global_batch 128   -> serve_step (1 new token,
+                                                  KV cache of seq_len)
+  long_500k    seq 524,288  global_batch 1     -> long-context decode; only
+                                                  sub-quadratic archs
+                                                  (mamba2, jamba)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+__all__ = ["ShapeCell", "SHAPES", "input_specs", "is_applicable",
+           "skip_reason"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def is_applicable(cfg: ModelConfig, cell: ShapeCell) -> bool:
+    return skip_reason(cfg, cell) is None
+
+
+def skip_reason(cfg: ModelConfig, cell: ShapeCell) -> str | None:
+    if cell.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return ("long_500k requires sub-quadratic attention; "
+                f"{cfg.arch_id} is a full-attention architecture "
+                "(gemma3's 5:1 local:global still has quadratic global "
+                "layers) — skipped per tasking rule, see DESIGN.md")
+    return None
+
+
+def _f(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStructs for the model-input batch of a cell (no device
+    allocation — the dry-run lowers against these)."""
+    B = cell.global_batch
+    S = cell.seq_len if cell.kind != "decode" else 1
+    dt = jnp.dtype(cfg.dtype)
+    batch: dict = {"tokens": _f((B, S), jnp.int32)}
+    if cfg.family == "vlm" and cell.kind != "decode":
+        batch["vision"] = _f((B, cfg.vision_tokens, cfg.d_model), dt)
+    if cfg.family == "audio" and cell.kind != "decode":
+        batch["audio_frames"] = _f((B, cell.seq_len, cfg.d_model), dt)
+    return batch
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """All abstract inputs for the cell's step function:
+      train:   {params, opt_state?, batch}   (assembled by launch.dryrun)
+      prefill: {params, batch}
+      decode:  {params, cache, token}
+    Only the batch/cache parts are produced here; params come from
+    models.abstract_params.
+    """
+    from repro.models.model import abstract_cache
+
+    out = {"batch": batch_specs(cfg, cell)}
+    if cell.kind == "decode":
+        out["cache"] = abstract_cache(cfg, cell.global_batch, cell.seq_len)
+    return out

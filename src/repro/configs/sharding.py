@@ -1,0 +1,198 @@
+"""Sharding policy: parameter / batch / cache PartitionSpecs per mesh.
+
+Rules (DESIGN.md §4):
+  * DP: the batch axis shards over every non-"model" mesh axis
+    (("pod","data") multi-pod) when divisible;
+  * TP: column-parallel in-projections (last dim on "model"),
+    row-parallel out-projections (first semantic dim on "model");
+  * EP: MoE expert dim on "model";
+  * FSDP/ZeRO: cfg.fsdp additionally shards the complementary weight dim
+    over "data" (optimizer state inherits the param spec = ZeRO-1);
+  * SP: decode KV caches shard the sequence dim over "model" (and over
+    ("data","model") for the batch-1 long-context cell);
+  * every rule is guarded by divisibility — a dim that does not divide by
+    the axis size stays replicated (recorded as such in the dry-run JSON).
+
+Leading stack dims introduced by scan-over-layers are never sharded.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .base import ModelConfig
+from .shapes import ShapeCell
+
+__all__ = ["param_specs", "batch_shardings", "cache_shardings",
+           "batch_axes_for", "logits_sharding"]
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= _axis_size(mesh, a)
+        return out
+    return mesh.shape[axis]
+
+
+def _if_div(dim: int, axis, mesh: Mesh):
+    """Use axis only if it divides dim."""
+    return axis if axis is not None and dim % _axis_size(mesh, axis) == 0 \
+        else None
+
+
+def batch_axes_for(mesh: Mesh, batch: int):
+    """Largest prefix of the non-model axes whose product divides batch."""
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    while axes and batch % _axis_size(mesh, axes) != 0:
+        axes = axes[:-1]
+    return axes if axes else None
+
+
+# -- parameters ---------------------------------------------------------------
+
+# (semantic_ndim, spec builder) keyed by parameter leaf name. The builder
+# receives (shape_of_semantic_dims, model_axis, fsdp_axis) and returns the
+# semantic PartitionSpec dims.
+def _col(shape, model, fsdp):     # [in, out] column parallel
+    return (fsdp, model)
+
+
+def _row(shape, model, fsdp):     # [in, out] row parallel
+    return (model, fsdp)
+
+
+def _expert_col(shape, model, fsdp):   # [E, in, out]
+    return (model, fsdp, None)
+
+
+def _expert_row(shape, model, fsdp):   # [E, in, out]
+    return (model, None, fsdp)
+
+
+def _vocab(shape, model, fsdp):   # [V, d]
+    return (model, fsdp)
+
+
+def _repl(shape, model, fsdp):
+    return tuple(None for _ in shape)
+
+
+_RULES: dict[str, tuple[int, Any]] = {
+    "embed": (2, _vocab), "lm_head": (2, _vocab),
+    "wq": (2, _col), "wk": (2, _col), "wv": (2, _col), "wo": (2, _row),
+    "w_gate": (2, _col), "w_up": (2, _col), "w_down": (2, _row),
+    "w_dq": (2, _col), "w_uq": (2, _col), "w_dkv": (2, _repl),
+    "w_uk": (2, _col), "w_uv": (2, _col),
+    "router": (2, _repl),
+    "shared_gate": (2, _col), "shared_up": (2, _col),
+    "shared_down": (2, _row),
+    "in_proj": (2, _col), "out_proj": (2, _row),
+    "conv_w": (2, lambda s, m, f: (None, m)),
+    "proj": (2, _col),
+}
+
+_MOE_RULES = {"w_gate": (3, _expert_col), "w_up": (3, _expert_col),
+              "w_down": (3, _expert_row)}
+
+
+def _leaf_spec(path: tuple, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = names[-1]
+    in_moe = "moe" in names
+    rules = _MOE_RULES if (in_moe and name in _MOE_RULES) else _RULES
+    if name not in rules:
+        return P()                                 # norms, scalars, biases
+    sem_ndim, builder = rules[name]
+    shape = leaf.shape
+    if len(shape) < sem_ndim:
+        return P()
+    sem_shape = shape[-sem_ndim:]
+    model = "model" if "model" in mesh.axis_names else None
+    fsdp = "data" if (cfg.fsdp and "data" in mesh.axis_names) else None
+    dims = list(builder(sem_shape, model, fsdp))
+    # divisibility guard per dim
+    dims = [_if_div(sem_shape[i], dims[i], mesh) for i in range(sem_ndim)]
+    lead = (None,) * (len(shape) - sem_ndim)
+    return P(*lead, *dims)
+
+
+def param_specs(cfg: ModelConfig, params_abstract, mesh: Mesh):
+    """Pytree of NamedSharding matching the abstract params."""
+    flat = jax.tree_util.tree_flatten_with_path(params_abstract)[0]
+    specs = {}
+    out = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, _leaf_spec(path, leaf, cfg,
+                                                          mesh)),
+        params_abstract)
+    del flat, specs
+    return out
+
+
+# -- batch / cache ------------------------------------------------------------
+
+def batch_shardings(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh) -> dict:
+    b = batch_axes_for(mesh, cell.global_batch)
+    ns = lambda *spec: NamedSharding(mesh, P(*spec))  # noqa: E731
+    out = {"tokens": ns(b, None)}
+    if cfg.family == "vlm" and cell.kind != "decode":
+        out["vision"] = ns(b, None, None)
+    if cfg.family == "audio" and cell.kind != "decode":
+        out["audio_frames"] = ns(b, None, None)
+    return out
+
+
+def _seq_axes(cell: ShapeCell, mesh: Mesh, seq: int):
+    """Sequence-dim sharding for decode caches (SP)."""
+    if cell.global_batch == 1:
+        cand = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    else:
+        cand = ("model",) if "model" in mesh.axis_names else ()
+    cand = cand if cand and seq % _axis_size(mesh, cand) == 0 else None
+    return cand
+
+
+def cache_shardings(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                    cache_abstract):
+    """Shardings for the decode cache pytree (init_cache structure)."""
+    b = batch_axes_for(mesh, cell.global_batch)
+    model = "model" if "model" in mesh.axis_names else None
+
+    def spec(path, leaf) -> NamedSharding:
+        names = [getattr(k, "key", getattr(k, "name", str(k)))
+                 for k in path]
+        shape = leaf.shape
+        if names[-1] == "pos" or len(shape) == 0:
+            return NamedSharding(mesh, P())
+        # all cache leaves: [n_super, B, ...]
+        if "mamba" in names:
+            if len(shape) == 5:        # [ns, B, H, P, N]
+                h_ax = _if_div(shape[2], model, mesh)
+                return NamedSharding(mesh, P(None, b, h_ax, None, None))
+            # conv [ns, B, W-1, conv_dim]
+            c_ax = _if_div(shape[3], model, mesh)
+            return NamedSharding(mesh, P(None, b, None, c_ax))
+        if "cross_kv" in names:        # [ns, B, V, KV, HD] read-only memory
+            v_ax = _if_div(shape[2], model, mesh)
+            return NamedSharding(mesh, P(None, b, v_ax, None, None))
+        if "mla" in names:             # [ns, B, S, r]
+            s_ax = _seq_axes(cell, mesh, shape[2])
+            return NamedSharding(mesh, P(None, b, s_ax, None))
+        if len(shape) == 5:            # kv [ns, B, S, KV, HD]
+            s_ax = _seq_axes(cell, mesh, shape[2])
+            return NamedSharding(mesh, P(None, b, s_ax, None, None))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(spec, cache_abstract)
+
+
+def logits_sharding(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh):
+    b = batch_axes_for(mesh, cell.global_batch)
+    model = "model" if "model" in mesh.axis_names else None
+    v_ax = _if_div(cfg.vocab_padded, model, mesh)
+    return NamedSharding(mesh, P(b, None, v_ax))

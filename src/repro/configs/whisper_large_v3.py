@@ -1,0 +1,19 @@
+"""whisper-large-v3 [audio] — enc-dec 32L+32L d1280 20H d_ff=5120
+vocab=51866; conv frontend is a STUB: input_specs provides precomputed
+frame embeddings [B, S_enc, d_model]. [arXiv:2212.04356; unverified]"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-large-v3",
+    family="audio",
+    n_layers=32,            # decoder layers
+    encoder_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,          # whisper uses MHA (kv == q heads)
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51866,
+    rope_theta=10_000.0,    # decoder positions (learned-pos adaptation)
+    source="arXiv:2212.04356; unverified",
+)

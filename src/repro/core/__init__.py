@@ -1,0 +1,29 @@
+"""Core marginalized-graph-kernel library (the paper's contribution).
+
+Public surface:
+  Graph / GraphBatch        graph containers (host / device)
+  base kernels              Constant, KroneckerDelta, SquareExponential, ...
+  octile_decompose          two-level sparse tile storage
+  rcm_order / pbr_order / morton_order / best_order
+  pcg_solve                 batched masked preconditioned CG
+  mgk_pairs / mgk_single    the marginalized graph kernel
+"""
+from .base_kernels import (BaseKernel, CompactPolynomial, Constant,
+                           KroneckerDelta, SquareExponential)
+from .graph import Graph, GraphBatch, batch_from_graphs, pad_graphs
+from .mgk import MGKResult, ProductSystem, build_product_system, mgk_pairs, \
+    mgk_single
+from .octile import (OctileSet, count_nonempty_tiles, expand_octiles,
+                     octile_decompose, tile_occupancy_histogram)
+from .pcg import PCGResult, pcg_solve
+from .reorder import best_order, morton_order, pbr_order, rcm_order
+
+__all__ = [
+    "BaseKernel", "CompactPolynomial", "Constant", "KroneckerDelta",
+    "SquareExponential", "Graph", "GraphBatch", "batch_from_graphs",
+    "pad_graphs", "MGKResult", "ProductSystem", "build_product_system",
+    "mgk_pairs", "mgk_single", "OctileSet", "count_nonempty_tiles",
+    "expand_octiles", "octile_decompose", "tile_occupancy_histogram",
+    "PCGResult", "pcg_solve", "best_order", "morton_order", "pbr_order",
+    "rcm_order",
+]

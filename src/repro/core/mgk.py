@@ -1,0 +1,247 @@
+"""The marginalized graph kernel (paper Eq. 15) — the library's core API.
+
+    K(G, G') = p_x^T (D_x V_x^{-1} - A_x .* E_x)^{-1} D_x q_x
+
+computed with the batched PCG of core/pcg.py and one of the XMV backends:
+
+  method = "full"         exact product materialization (naive baseline)
+           "elementwise"  paper-faithful streaming XMV (jnp)
+           "lowrank"      beyond-paper MXU sandwich (feature expansion)
+           "pallas"       Pallas TPU tiling&blocking kernel
+           "pallas_sparse" Pallas block-sparse octile kernel
+           "adaptive"     density-based host dispatch (paper Sec. IV-B)
+
+Batched over pairs: both operands are GraphBatch pytrees of equal batch
+size; entry b of the output compares batch1[b] with batch2[b]. The
+all-pairs Gram matrix driver lives in distributed/gram.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base_kernels import BaseKernel, Constant
+from .graph import GraphBatch
+from .pcg import PCGResult, pcg_solve
+from .xmv import xmv_elementwise, xmv_full, xmv_lowrank_precomputed, \
+    weighted_operands
+
+__all__ = ["MGKResult", "mgk_pairs", "mgk_single", "ProductSystem",
+           "build_product_system"]
+
+
+class ProductSystem(NamedTuple):
+    """Diagonal terms of the product-graph linear system, [B, n*m] each."""
+    dx: jnp.ndarray      # d (x) d'
+    vx: jnp.ndarray      # kappa_v(v_i, v'_i')
+    qx: jnp.ndarray      # q (x) q'
+    px: jnp.ndarray      # p (x) p'
+    mask: jnp.ndarray    # node_mask (x) node_mask'
+
+
+class MGKResult(NamedTuple):
+    values: jnp.ndarray       # [B] kernel values
+    iterations: jnp.ndarray   # [B] CG iterations
+    converged: jnp.ndarray    # [B]
+    nodal: jnp.ndarray | None  # [B, n, m] node-wise similarity (V_x r_inf)
+
+
+def _outer_flat(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Batched Kronecker of vectors: [B, n], [B, m] -> [B, n*m]."""
+    return (a[:, :, None] * b[:, None, :]).reshape(a.shape[0], -1)
+
+
+def build_product_system(g1: GraphBatch, g2: GraphBatch,
+                         vertex_kernel: BaseKernel) -> ProductSystem:
+    mask = _outer_flat(g1.node_mask, g2.node_mask)
+    vx = vertex_kernel(
+        g1.vertex_labels[:, :, None],
+        g2.vertex_labels[:, None, :]).reshape(mask.shape)
+    # padded entries: vx=1, dx=1 keeps the padded diagonal SPD & decoupled
+    vx = jnp.where(mask > 0, vx, 1.0)
+    dx = _outer_flat(g1.degrees, g2.degrees)
+    dx = jnp.where(mask > 0, dx, 1.0)
+    qx = _outer_flat(g1.stop_prob, g2.stop_prob) * mask
+    px = _outer_flat(g1.start_prob, g2.start_prob) * mask
+    return ProductSystem(dx=dx, vx=vx, qx=qx, px=px, mask=mask)
+
+
+def _make_matvec(g1: GraphBatch, g2: GraphBatch, sys_: ProductSystem,
+                 edge_kernel: BaseKernel, method: str, chunk: int):
+    """Returns matvec([B, n*m]) applying (D_x V_x^{-1} - A_x .* E_x)."""
+    B, n = g1.adjacency.shape[0], g1.adjacency.shape[1]
+    m = g2.adjacency.shape[1]
+    diag = sys_.dx / sys_.vx
+
+    if method == "lowrank":
+        wa = jax.vmap(lambda a, e: weighted_operands(a, e, edge_kernel))(
+            g1.adjacency, g1.edge_labels)   # [B, R, n, n]
+        wap = jax.vmap(lambda a, e: weighted_operands(a, e, edge_kernel))(
+            g2.adjacency, g2.edge_labels)   # [B, R, m, m]
+
+        def matvec(p_vec):
+            P = p_vec.reshape(B, n, m)
+            y = jax.vmap(xmv_lowrank_precomputed)(wa, wap, P)
+            return diag * p_vec - y.reshape(B, -1)
+        return matvec
+
+    if method == "pallas":
+        # imported lazily: kernels package depends on core
+        from repro.kernels import ops as kops
+
+        def matvec(p_vec):
+            P = p_vec.reshape(B, n, m)
+            y = kops.xmv_dense_batched(g1.adjacency, g1.edge_labels,
+                                       g2.adjacency, g2.edge_labels, P,
+                                       edge_kernel)
+            return diag * p_vec - y.reshape(B, -1)
+        return matvec
+
+    if method == "full":
+        xmv_one = functools.partial(xmv_full, edge_kernel=edge_kernel)
+    elif method == "elementwise":
+        xmv_one = functools.partial(xmv_elementwise,
+                                    edge_kernel=edge_kernel, chunk=chunk)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    def matvec(p_vec):
+        P = p_vec.reshape(B, n, m)
+        y = jax.vmap(lambda a, e, ap, ep, pp: xmv_one(a, e, ap, ep, pp))(
+            g1.adjacency, g1.edge_labels, g2.adjacency, g2.edge_labels, P)
+        return diag * p_vec - y.reshape(B, -1)
+    return matvec
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("vertex_kernel", "edge_kernel", "method", "chunk",
+                     "max_iter", "return_nodal", "fixed_iters"))
+def mgk_pairs(
+    g1: GraphBatch,
+    g2: GraphBatch,
+    vertex_kernel: BaseKernel = Constant(1.0),
+    edge_kernel: BaseKernel = Constant(1.0),
+    *,
+    method: str = "lowrank",
+    chunk: int = 8,
+    tol: float = 1e-10,
+    max_iter: int = 512,
+    return_nodal: bool = False,
+    fixed_iters: int | None = None,
+) -> MGKResult:
+    """Marginalized graph kernel between aligned pairs of two batches."""
+    sys_ = build_product_system(g1, g2, vertex_kernel)
+    matvec = _make_matvec(g1, g2, sys_, edge_kernel, method, chunk)
+    rhs = sys_.dx * sys_.qx
+    precond = sys_.dx / sys_.vx      # paper Alg. 1 line 2
+    sol: PCGResult = pcg_solve(matvec, rhs, precond, tol=tol,
+                               max_iter=max_iter, fixed_iters=fixed_iters)
+    values = jnp.sum(sys_.px * sol.x, axis=-1)
+    nodal = None
+    if return_nodal:
+        B, n = g1.adjacency.shape[0], g1.adjacency.shape[1]
+        m = g2.adjacency.shape[1]
+        nodal = sol.x.reshape(B, n, m)
+    return MGKResult(values=values, iterations=sol.iterations,
+                     converged=sol.converged, nodal=nodal)
+
+
+def mgk_single(g1: GraphBatch, g2: GraphBatch, **kw) -> MGKResult:
+    """Convenience wrapper for batch size 1."""
+    return mgk_pairs(g1, g2, **kw)
+
+
+def tile_density(batch: GraphBatch, tile: int = 8) -> float:
+    """Host-side fraction of non-empty octiles (mean over the batch)."""
+    import numpy as np
+    from .octile import count_nonempty_tiles
+    dens = []
+    for b in range(batch.adjacency.shape[0]):
+        a = np.asarray(batch.adjacency[b])
+        nt = a.shape[0] // tile
+        dens.append(count_nonempty_tiles(a, tile) / max(nt * nt, 1))
+    return float(np.mean(dens))
+
+
+def mgk_adaptive(g1: GraphBatch, g2: GraphBatch,
+                 vertex_kernel: BaseKernel = Constant(1.0),
+                 edge_kernel: BaseKernel = Constant(1.0),
+                 *, density_threshold: float = 0.15,
+                 tol: float = 1e-10, max_iter: int = 512) -> MGKResult:
+    """The paper's adaptive primitive switch (Sec. IV-B), lifted to the
+    bucket level: pick the XMV backend per pair-batch from the octile
+    density statistic.
+
+    * kernels with a usable feature expansion -> low-rank MXU sandwich
+      (dominates on TPU whenever R << density * n, which is essentially
+      always for R <= 16 — see EXPERIMENTS §Perf cell C);
+    * no expansion + sparse octiles -> block-sparse Pallas path;
+    * no expansion + dense graphs   -> dense tiling&blocking path.
+    """
+    import numpy as np
+    rank = edge_kernel.feature_rank()
+    n = g1.adjacency.shape[1]
+    dens = max(tile_density(g1), tile_density(g2))
+    # the SE Taylor expansion is only accurate within its label domain —
+    # outside it, fall back to exact elementwise paths
+    domain = getattr(edge_kernel, "domain", None)
+    if domain is not None:
+        lmax = max(float(np.abs(np.asarray(g1.edge_labels)).max()),
+                   float(np.abs(np.asarray(g2.edge_labels)).max()))
+        if lmax > domain:
+            rank = None
+    if rank is not None and rank <= max(16, dens * n):
+        return mgk_pairs(g1, g2, vertex_kernel, edge_kernel,
+                         method="lowrank", tol=tol, max_iter=max_iter)
+    if dens < density_threshold:
+        from repro.kernels.ops import packs_for_batch
+        return mgk_pairs_sparse(g1, g2, packs_for_batch(g1),
+                                packs_for_batch(g2), vertex_kernel,
+                                edge_kernel, tol=tol, max_iter=max_iter)
+    return mgk_pairs(g1, g2, vertex_kernel, edge_kernel, method="pallas",
+                     tol=tol, max_iter=max_iter)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("vertex_kernel", "edge_kernel", "max_iter",
+                     "return_nodal"))
+def mgk_pairs_sparse(
+    g1: GraphBatch,
+    g2: GraphBatch,
+    packs1,                      # stacked TilePack [B, ...] (stack_packs)
+    packs2,
+    vertex_kernel: BaseKernel = Constant(1.0),
+    edge_kernel: BaseKernel = Constant(1.0),
+    *,
+    tol: float = 1e-10,
+    max_iter: int = 512,
+    return_nodal: bool = False,
+) -> MGKResult:
+    """Block-sparse-octile variant of mgk_pairs (paper Sec. IV).
+
+    The TilePacks are host-preprocessed (pack_octiles after reordering) —
+    the quadratic CG work then touches only non-empty octiles. GraphBatch
+    still supplies the diagonal/probability vectors (cheap, O(n+m))."""
+    from repro.kernels.ops import xmv_block_sparse_batched
+
+    sys_ = build_product_system(g1, g2, vertex_kernel)
+    B, n = g1.adjacency.shape[0], g1.adjacency.shape[1]
+    m = g2.adjacency.shape[1]
+    diag = sys_.dx / sys_.vx
+
+    def matvec(p_vec):
+        P = p_vec.reshape(B, n, m)
+        y = xmv_block_sparse_batched(packs1, packs2, P, edge_kernel)
+        return diag * p_vec - y.reshape(B, -1)
+
+    rhs = sys_.dx * sys_.qx
+    sol = pcg_solve(matvec, rhs, diag, tol=tol, max_iter=max_iter)
+    values = jnp.sum(sys_.px * sol.x, axis=-1)
+    nodal = sol.x.reshape(B, n, m) if return_nodal else None
+    return MGKResult(values=values, iterations=sol.iterations,
+                     converged=sol.converged, nodal=nodal)

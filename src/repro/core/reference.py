@@ -1,0 +1,79 @@
+"""Slow numpy oracles for validating the solver end to end.
+
+Two independent ground truths:
+
+* :func:`mgk_direct` — build the explicit product system with ``np.kron``
+  and solve it with a dense direct solver (LAPACK). This is also the
+  "GraKeL-style explicit CPU solver" baseline of benchmarks/packages.py.
+* :func:`mgk_walk_sum` — evaluate the kernel's *definition* (paper Eq. 4 /
+  Eq. 9 fixed-point iteration) truncated at walk length L. Converges
+  geometrically, so moderate L validates the linear-algebra reformulation
+  itself.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .graph import Graph
+
+__all__ = ["mgk_direct", "mgk_walk_sum", "product_matrix"]
+
+
+def _kappa_np(kernel, x, y):
+    """Evaluate a BaseKernel on numpy inputs (via jnp, back to numpy)."""
+    import jax.numpy as jnp
+    return np.asarray(kernel(jnp.asarray(x), jnp.asarray(y)))
+
+
+def product_matrix(g1: Graph, g2: Graph, vertex_kernel, edge_kernel
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Explicit (L_x, D_x q_x, p_x) of paper Eq. 15."""
+    d1, d2 = g1.degrees(), g2.degrees()
+    dx = np.kron(d1, d2)
+    vx = _kappa_np(vertex_kernel,
+                   np.repeat(g1.vertex_labels, g2.n_nodes),
+                   np.tile(g2.vertex_labels, g1.n_nodes))
+    Ax = np.kron(g1.adjacency, g2.adjacency)
+    # generalized Kronecker product E (x)_kappa E'
+    E1 = np.repeat(np.repeat(g1.edge_labels, g2.n_nodes, 0),
+                   g2.n_nodes, 1)
+    E2 = np.tile(g2.edge_labels, (g1.n_nodes, g1.n_nodes))
+    Ex = _kappa_np(edge_kernel, E1, E2)
+    Lx = np.diag(dx / vx) - Ax * Ex
+    rhs = dx * np.kron(g1.stop_prob, g2.stop_prob)
+    px = np.kron(g1.start_prob, g2.start_prob)
+    return Lx, rhs, px
+
+
+def mgk_direct(g1: Graph, g2: Graph, vertex_kernel, edge_kernel) -> float:
+    """Direct dense solve of paper Eq. 15."""
+    Lx, rhs, px = product_matrix(g1, g2, vertex_kernel, edge_kernel)
+    y = np.linalg.solve(Lx, rhs)
+    return float(px @ y)
+
+
+def mgk_walk_sum(g1: Graph, g2: Graph, vertex_kernel, edge_kernel,
+                 max_len: int = 200) -> float:
+    """Fixed-point iteration of paper Eq. (9), truncated at ``max_len``.
+
+    r_{k+1} = q_x + (P_x .* E_x) V_x r_k, K = p_x^T V_x r_inf,
+    with P = D^{-1} A the transition matrix. Independent of Eq. (15)'s
+    symmetrized form, so it validates the derivation chain.
+    """
+    d1, d2 = g1.degrees(), g2.degrees()
+    P1 = g1.adjacency / d1[:, None]
+    P2 = g2.adjacency / d2[:, None]
+    Px = np.kron(P1, P2)
+    E1 = np.repeat(np.repeat(g1.edge_labels, g2.n_nodes, 0), g2.n_nodes, 1)
+    E2 = np.tile(g2.edge_labels, (g1.n_nodes, g1.n_nodes))
+    Ex = _kappa_np(edge_kernel, E1, E2)
+    vx = _kappa_np(vertex_kernel,
+                   np.repeat(g1.vertex_labels, g2.n_nodes),
+                   np.tile(g2.vertex_labels, g1.n_nodes))
+    qx = np.kron(g1.stop_prob, g2.stop_prob)
+    px = np.kron(g1.start_prob, g2.start_prob)
+    T = (Px * Ex) * vx[None, :]
+    r = qx.copy()
+    for _ in range(max_len):
+        r = qx + T @ r
+    return float(px @ (vx * r))

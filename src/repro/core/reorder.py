@@ -1,0 +1,296 @@
+"""Graph reordering for inter-tile sparsity (paper Sec. IV-A).
+
+Implements the three orderings the paper retains:
+
+* :func:`pbr_order` — partition-based reordering: recursive balanced
+  bipartitioning with Fiduccia–Mattheyses refinement, targeting the paper's
+  Eq. (3) objective (minimize the number of connected part pairs = non-empty
+  off-diagonal octiles). Parts of size ``tile`` imply the ordering.
+* :func:`rcm_order` — Reverse Cuthill–McKee bandwidth reduction.
+* :func:`morton_order` — Morton (Z-curve) order for graphs whose nodes are
+  embedded in Euclidean space (e.g. 3D molecular structures).
+
+All host-side numpy: reordering is linear-ish preprocessing amortized over
+hundreds of quadratic-cost kernel evaluations (paper Sec. IV "Reordering
+overhead").
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .octile import count_nonempty_tiles
+
+__all__ = ["rcm_order", "morton_order", "pbr_order", "best_order"]
+
+
+def _adjacency_lists(adjacency: np.ndarray) -> list[np.ndarray]:
+    a = np.asarray(adjacency)
+    return [np.nonzero(a[i])[0] for i in range(a.shape[0])]
+
+
+def _pseudo_peripheral(adj: list[np.ndarray], degrees: np.ndarray,
+                       component: np.ndarray) -> int:
+    """Find a pseudo-peripheral vertex of one connected component by
+    repeated BFS (George–Liu heuristic)."""
+    root = int(component[np.argmin(degrees[component])])
+    last_ecc = -1
+    for _ in range(8):
+        # BFS levels from root
+        level = {root: 0}
+        frontier = [root]
+        depth = 0
+        while frontier:
+            nxt = []
+            for u in frontier:
+                for v in adj[u]:
+                    v = int(v)
+                    if v not in level:
+                        level[v] = depth + 1
+                        nxt.append(v)
+            if nxt:
+                depth += 1
+            frontier = nxt
+        if depth <= last_ecc:
+            break
+        last_ecc = depth
+        last_level = [u for u, l in level.items() if l == depth]
+        root = min(last_level, key=lambda u: degrees[u])
+    return root
+
+
+def rcm_order(adjacency: np.ndarray) -> np.ndarray:
+    """Reverse Cuthill–McKee ordering. Returns perm with perm[k] = old index
+    of the k-th node in the new order."""
+    a = np.asarray(adjacency)
+    n = a.shape[0]
+    adj = _adjacency_lists(a)
+    degrees = np.array([len(x) for x in adj])
+    visited = np.zeros(n, bool)
+    order: list[int] = []
+    while len(order) < n:
+        comp_seed = int(np.nonzero(~visited)[0][0])
+        # collect the component
+        comp, stack = [], [comp_seed]
+        seen = {comp_seed}
+        while stack:
+            u = stack.pop()
+            comp.append(u)
+            for v in adj[u]:
+                v = int(v)
+                if v not in seen:
+                    seen.add(v)
+                    stack.append(v)
+        comp = np.array(comp)
+        root = _pseudo_peripheral(adj, degrees, comp)
+        # Cuthill–McKee BFS with degree-sorted neighbor visiting
+        queue = [root]
+        visited[root] = True
+        qi = 0
+        while qi < len(queue):
+            u = queue[qi]
+            qi += 1
+            order.append(u)
+            nbrs = [int(v) for v in adj[u] if not visited[v]]
+            nbrs.sort(key=lambda v: degrees[v])
+            for v in nbrs:
+                visited[v] = True
+                queue.append(v)
+    return np.array(order[::-1], dtype=np.int64)  # reverse CM
+
+
+def morton_order(coords: np.ndarray, bits: int = 10) -> np.ndarray:
+    """Morton (Z-)curve ordering of spatially embedded nodes.
+
+    Args:
+      coords: [n, d] node coordinates, d <= 3.
+    """
+    coords = np.asarray(coords, np.float64)
+    n, d = coords.shape
+    lo = coords.min(axis=0)
+    span = np.maximum(coords.max(axis=0) - lo, 1e-12)
+    q = np.minimum(((coords - lo) / span * (2 ** bits - 1)).astype(np.uint64),
+                   2 ** bits - 1)
+    codes = np.zeros(n, np.uint64)
+    for bit in range(bits):
+        for dim in range(d):
+            codes |= ((q[:, dim] >> np.uint64(bit)) & np.uint64(1)) << \
+                np.uint64(bit * d + dim)
+    return np.argsort(codes, kind="stable")
+
+
+# ----------------------------------------------------------------------
+# Partition-based reordering (PBR)
+# ----------------------------------------------------------------------
+
+def _fm_refine(adj: list[np.ndarray], side: np.ndarray, max_imbalance: int,
+               passes: int = 8, rng: np.random.Generator | None = None
+               ) -> np.ndarray:
+    """Fiduccia–Mattheyses refinement of a bipartition.
+
+    ``side`` is a bool array; the balance constraint keeps
+    ``|#True - target_true| <= max_imbalance``.
+    Minimizes the edge cut (a consistent proxy of paper Eq. 3 at the
+    bipartition level: fewer cut edges -> fewer connected part pairs after
+    recursion).
+    """
+    n = len(side)
+    side = side.copy()
+    target_true = int(side.sum())
+    for _ in range(passes):
+        locked = np.zeros(n, bool)
+        # gain = external degree - internal degree
+        gains = np.zeros(n, np.int64)
+        for u in range(n):
+            for v in adj[u]:
+                gains[u] += 1 if side[v] != side[u] else -1
+        best_cut_delta, cum_delta = 0, 0
+        moves: list[int] = []
+        count_true = target_true
+        best_prefix = 0
+        for _step in range(n):
+            cand = np.nonzero(~locked)[0]
+            if len(cand) == 0:
+                break
+            # balance-feasible candidates
+            feas = []
+            for u in cand:
+                new_true = count_true + (-1 if side[u] else 1)
+                if abs(new_true - target_true) <= max_imbalance:
+                    feas.append(u)
+            if not feas:
+                break
+            feas = np.array(feas)
+            u = int(feas[np.argmax(gains[feas])])
+            cum_delta -= gains[u]
+            moves.append(u)
+            locked[u] = True
+            count_true += (-1 if side[u] else 1)
+            side[u] = ~side[u]
+            for v in adj[u]:
+                v = int(v)
+                if side[v] == side[u]:
+                    gains[v] -= 2
+                else:
+                    gains[v] += 2
+            if cum_delta < best_cut_delta:
+                best_cut_delta = cum_delta
+                best_prefix = len(moves)
+        # roll back moves after the best prefix
+        for u in moves[best_prefix:]:
+            side[u] = ~side[u]
+        if best_prefix == 0:
+            break
+    return side
+
+
+def _grow_bipartition(adj: list[np.ndarray], nodes: np.ndarray,
+                      half: int) -> np.ndarray:
+    """BFS graph-growing initial bipartition of ``nodes`` (local indices)."""
+    n = len(nodes)
+    side = np.zeros(n, bool)
+    pos = {int(g): i for i, g in enumerate(nodes)}
+    degree = np.array([sum(1 for v in adj[g] if int(v) in pos)
+                       for g in nodes])
+    seen = np.zeros(n, bool)
+    grown = 0
+    while grown < half:
+        seeds = np.nonzero(~seen)[0]
+        root = int(seeds[np.argmin(degree[seeds])])
+        queue, seen[root] = [root], True
+        qi = 0
+        while qi < len(queue) and grown < half:
+            u = queue[qi]
+            qi += 1
+            side[u] = True
+            grown += 1
+            for gv in adj[int(nodes[u])]:
+                lv = pos.get(int(gv))
+                if lv is not None and not seen[lv]:
+                    seen[lv] = True
+                    queue.append(lv)
+    return side
+
+
+def pbr_order(adjacency: np.ndarray, tile: int = 8,
+              fm_passes: int = 8, restarts: int = 3) -> np.ndarray:
+    """Partition-based reordering (paper Sec. IV-A, after [8]).
+
+    Recursive balanced bipartitioning with boundary-FM refinement and tight
+    balance (the paper's "custom weight distribution ... to promote equally
+    sized parts"), recursing until parts have at most ``tile`` vertices. The
+    concatenated parts imply the node order; a final exact-balance step
+    fixes any residual imbalance (the paper's extra FM-based refinement).
+
+    Multi-start: the recursive bipartitioning is seeded from ``restarts``
+    different growth roots and the ordering with the fewest non-empty
+    tiles (the objective itself, paper Eq. 3) is kept — the cheap stand-in
+    for the hypergraph partitioner's randomized coarsening in [8].
+    """
+    a = np.asarray(adjacency)
+    n = a.shape[0]
+    adj = _adjacency_lists(a)
+
+    def one_run(seed: int) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        order: list[int] = []
+
+        def recurse(nodes: np.ndarray) -> None:
+            if len(nodes) <= tile:
+                order.extend(int(u) for u in nodes)
+                return
+            # split into sizes that stay multiples of tile where possible
+            # (custom weight distribution promoting equally sized tiles)
+            n_tiles = -(-len(nodes) // tile)
+            left_tiles = n_tiles // 2
+            half = left_tiles * tile
+            if seed == 0:
+                sub_nodes = nodes
+            else:  # randomized growth root for restarts
+                sub_nodes = np.array(sorted(
+                    nodes, key=lambda u: rng.random()))
+            side = _grow_bipartition(adj, sub_nodes, half)
+            # map side back onto `nodes` order
+            side_map = dict(zip((int(u) for u in sub_nodes), side))
+            side = np.array([side_map[int(u)] for u in nodes])
+            # restrict adjacency to this subgraph for FM
+            pos = {int(g): i for i, g in enumerate(nodes)}
+            sub_adj = [np.array([pos[int(v)] for v in adj[int(g)]
+                                 if int(v) in pos], dtype=np.int64)
+                       for g in nodes]
+            side = _fm_refine(sub_adj, side, max_imbalance=0,
+                              passes=fm_passes)
+            recurse(nodes[side])
+            recurse(nodes[~side])
+
+        recurse(np.arange(n))
+        return np.array(order, dtype=np.int64)
+
+    best_perm, best_score = None, None
+    for seed in range(restarts):
+        perm = one_run(seed)
+        score = count_nonempty_tiles(a[np.ix_(perm, perm)], tile)
+        if best_score is None or score < best_score:
+            best_perm, best_score = perm, score
+    return best_perm
+
+
+def best_order(adjacency: np.ndarray, tile: int = 8,
+               coords: np.ndarray | None = None
+               ) -> tuple[np.ndarray, str, int]:
+    """Try natural / RCM / PBR (and Morton when coords given); return the
+    permutation with the fewest non-empty tiles — the adaptive policy the
+    production pipeline uses."""
+    a = np.asarray(adjacency)
+    candidates: dict[str, np.ndarray] = {
+        "natural": np.arange(a.shape[0]),
+        "rcm": rcm_order(a),
+        "pbr": pbr_order(a, tile=tile),
+    }
+    if coords is not None:
+        candidates["morton"] = morton_order(coords)
+    scores = {
+        name: count_nonempty_tiles(a[np.ix_(p, p)], tile)
+        for name, p in candidates.items()
+    }
+    name = min(scores, key=scores.get)
+    return candidates[name], name, scores[name]

@@ -1,0 +1,108 @@
+"""On-the-fly Kronecker product matrix-vector multiplication (XMV).
+
+This module holds the pure-JAX (jnp) implementations of the paper's
+Algorithm 2 — the hotspot of the CG solve:
+
+    y[ii'] = sum_{jj'}  A[i,j] * A'[i',j'] * kappa_e(E[i,j], E'[i',j'])
+                        * p[jj']
+
+Variants:
+
+* :func:`xmv_full`        — materializes the [n,n,m,m] product; exact oracle
+                            for small graphs (the "naive" baseline column of
+                            paper Table I, used for validation + benchmarks).
+* :func:`xmv_elementwise` — streams over j-chunks, never materializing more
+                            than O(n m^2 c) — the jnp analogue of the
+                            paper-faithful on-the-fly primitive. The Pallas
+                            production kernel (kernels/xmv_dense.py) is the
+                            TPU version of this.
+* :func:`xmv_lowrank`     — beyond-paper MXU path: with a symmetric feature
+                            expansion kappa(x,y) = sum_r phi_r(x) phi_r(y),
+                            XMV becomes  y = sum_r (A .* phi_r(E)) P
+                            (A' .* phi_r(E'))^T — pure matmuls.
+
+All functions take and return the product-space vector reshaped as a
+[n, m] matrix P (row j indexes graph-1 nodes, column j' graph-2 nodes) and
+are batched with vmap at the call site.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .base_kernels import BaseKernel
+
+__all__ = ["xmv_full", "xmv_elementwise", "xmv_lowrank", "weighted_operands"]
+
+
+def xmv_full(A, E, Ap, Ep, P, edge_kernel: BaseKernel):
+    """Exact XMV via full product materialization. O(n^2 m^2) memory."""
+    # K[i, j, ip, jp] = kappa(E[i, j], Ep[ip, jp])
+    K = edge_kernel(E[:, :, None, None], Ep[None, None, :, :])
+    W = A[:, :, None, None] * Ap[None, None, :, :] * K
+    return jnp.einsum("ijkl,jl->ik", W, P)
+
+
+def xmv_elementwise(A, E, Ap, Ep, P, edge_kernel: BaseKernel,
+                    chunk: int = 8):
+    """Paper-faithful streaming XMV: scan over length-``chunk`` column
+    blocks of (A, E), regenerating kappa products on the fly. Peak temp
+    memory O(chunk * n * m^2) instead of O(n^2 m^2)."""
+    n, m = A.shape[0], Ap.shape[0]
+    if n % chunk:
+        raise ValueError(f"n={n} must be a multiple of chunk={chunk}")
+
+    def body(carry, j0):
+        y = carry
+        Aj = jax.lax.dynamic_slice(A, (0, j0), (n, chunk))      # [n, c]
+        Ej = jax.lax.dynamic_slice(E, (0, j0), (n, chunk))      # [n, c]
+        Pj = jax.lax.dynamic_slice(P, (j0, 0), (chunk, m))      # [c, m]
+        # kappa between this chunk's labels and ALL of E': [n, c, m, m]
+        K = edge_kernel(Ej[:, :, None, None], Ep[None, None, :, :])
+        W = Aj[:, :, None, None] * Ap[None, None, :, :] * K
+        y = y + jnp.einsum("ickl,cl->ik", W, Pj)
+        return y, None
+
+    y0 = jnp.zeros((n, m), P.dtype)
+    y, _ = jax.lax.scan(body, y0, jnp.arange(0, n, chunk))
+    return y
+
+
+def weighted_operands(A, E, edge_kernel: BaseKernel):
+    """[R, n, n] stack of (A .* phi_r(E)) for the low-rank path."""
+    phi = edge_kernel.features(E)  # [n, n, R]
+    if phi is None:
+        raise ValueError(
+            f"{type(edge_kernel).__name__} has no feature expansion; use the"
+            " elementwise path")
+    return jnp.einsum("ij,ijr->rij", A, phi)
+
+
+def xmv_lowrank(A, E, Ap, Ep, P, edge_kernel: BaseKernel):
+    """Beyond-paper MXU 'sandwich' XMV (DESIGN.md §2): two dense matmuls
+    per feature rank. FLOPs 2R(n^2 m + n m^2) vs the elementwise path's
+    X n^2 m^2 — asymptotically cheaper AND MXU-eligible."""
+    WA = weighted_operands(A, E, edge_kernel)     # [R, n, n]
+    WAp = weighted_operands(Ap, Ep, edge_kernel)  # [R, m, m]
+    return jnp.einsum("rij,jl,rkl->ik", WA, P, WAp)
+
+
+def xmv_lowrank_precomputed(WA, WAp, P):
+    """Low-rank XMV with pre-weighted operands (amortized across the CG
+    iterations of one solve — the weighting is loop-invariant)."""
+    return jnp.einsum("rij,jl,rkl->ik", WA, P, WAp)
+
+
+@partial(jax.jit, static_argnames=("edge_kernel", "method", "chunk"))
+def xmv(A, E, Ap, Ep, P, edge_kernel: BaseKernel, method: str = "full",
+        chunk: int = 8):
+    """Dispatching convenience wrapper (single pair)."""
+    if method == "full":
+        return xmv_full(A, E, Ap, Ep, P, edge_kernel)
+    if method == "elementwise":
+        return xmv_elementwise(A, E, Ap, Ep, P, edge_kernel, chunk=chunk)
+    if method == "lowrank":
+        return xmv_lowrank(A, E, Ap, Ep, P, edge_kernel)
+    raise ValueError(f"unknown method {method!r}")

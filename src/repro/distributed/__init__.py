@@ -1,0 +1,13 @@
+"""Distributed Gram-matrix runtime: cost-model scheduling, chunked
+checkpoint/restart, elastic re-planning, straggler speculation, and the
+sharded pair-solve step (paper Sec. V scaled from one GPU to a pod mesh)."""
+from .scheduler import SchedulePlan, make_plan, replan
+from .checkpoint import ChunkStore, save_array_checkpoint, \
+    load_array_checkpoint
+from .gram import GramDriver, gram_pair_step, solve_pair_block
+
+__all__ = [
+    "SchedulePlan", "make_plan", "replan", "ChunkStore",
+    "save_array_checkpoint", "load_array_checkpoint", "GramDriver",
+    "gram_pair_step", "solve_pair_block",
+]

@@ -1,0 +1,176 @@
+"""Checkpoint/restart for long-running distributed jobs.
+
+Two granularities:
+
+* :class:`ChunkStore` — the Gram pipeline's unit of fault tolerance. Every
+  completed PairBlock's results land as one CRC-protected, atomically
+  renamed file plus a manifest entry. Restart = scan manifest, recompute
+  only missing blocks. First-writer-wins semantics make straggler
+  speculation safe: a duplicate completion of the same block is a no-op.
+* :func:`save_array_checkpoint` / :func:`load_array_checkpoint` — pytree
+  checkpoints for LM training state (params/optimizer/step), also
+  CRC + atomic-rename, with a rolling ``keep_last`` window.
+
+No external deps: npz + json. On a real fleet the directory would live on
+a parallel filesystem / object store; the protocol (atomic rename +
+manifest scan) is the portable part.
+"""
+from __future__ import annotations
+
+import json
+import os
+import zlib
+from typing import Any
+
+import numpy as np
+
+import jax
+
+__all__ = ["ChunkStore", "save_array_checkpoint", "load_array_checkpoint"]
+
+
+def _atomic_write(path: str, data: bytes) -> None:
+    tmp = path + f".tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, path)
+
+
+class ChunkStore:
+    """Directory-backed store of per-block results with a manifest."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._manifest_path = os.path.join(root, "manifest.json")
+
+    # -- manifest ---------------------------------------------------------
+    def done_blocks(self) -> set[int]:
+        if not os.path.exists(self._manifest_path):
+            return set()
+        with open(self._manifest_path) as f:
+            manifest = json.load(f)
+        return {int(k) for k, v in manifest.items() if v.get("crc") is not None}
+
+    def _update_manifest(self, block_id: int, entry: dict) -> None:
+        manifest = {}
+        if os.path.exists(self._manifest_path):
+            with open(self._manifest_path) as f:
+                manifest = json.load(f)
+        if str(block_id) in manifest:
+            return  # first writer wins (straggler duplicate)
+        manifest[str(block_id)] = entry
+        _atomic_write(self._manifest_path,
+                      json.dumps(manifest, indent=0).encode())
+
+    # -- results ----------------------------------------------------------
+    def block_path(self, block_id: int) -> str:
+        return os.path.join(self.root, f"block_{block_id:08d}.npz")
+
+    def save_block(self, block_id: int, rows: np.ndarray, cols: np.ndarray,
+                   values: np.ndarray, iterations: np.ndarray) -> bool:
+        """Returns False if the block was already recorded (speculation)."""
+        if block_id in self.done_blocks():
+            return False
+        import io
+        buf = io.BytesIO()
+        np.savez(buf, rows=rows, cols=cols, values=values,
+                 iterations=iterations)
+        data = buf.getvalue()
+        path = self.block_path(block_id)
+        _atomic_write(path, data)
+        self._update_manifest(block_id, {
+            "crc": zlib.crc32(data), "n_pairs": int(len(rows)),
+        })
+        return True
+
+    def load_block(self, block_id: int) -> dict[str, np.ndarray]:
+        path = self.block_path(block_id)
+        with open(path, "rb") as f:
+            data = f.read()
+        with open(self._manifest_path) as f:
+            manifest = json.load(f)
+        want = manifest[str(block_id)]["crc"]
+        got = zlib.crc32(data)
+        if want != got:
+            raise IOError(
+                f"block {block_id} CRC mismatch ({got} != {want}) — corrupt "
+                "checkpoint; delete the file to force recompute")
+        import io
+        return dict(np.load(io.BytesIO(data)))
+
+    def assemble_gram(self, n: int, normalize: bool = False) -> np.ndarray:
+        """Gather all completed blocks into the (symmetric) Gram matrix."""
+        K = np.full((n, n), np.nan, np.float64)
+        for bid in sorted(self.done_blocks()):
+            blk = self.load_block(bid)
+            K[blk["rows"], blk["cols"]] = blk["values"]
+            K[blk["cols"], blk["rows"]] = blk["values"]
+        if normalize:
+            d = np.sqrt(np.diag(K))
+            K = K / d[:, None] / d[None, :]
+        return K
+
+
+# -- pytree checkpoints for LM training --------------------------------------
+
+def _flatten_with_names(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    return flat, treedef
+
+
+def save_array_checkpoint(root: str, step: int, tree: Any,
+                          keep_last: int = 3) -> str:
+    os.makedirs(root, exist_ok=True)
+    flat, _ = _flatten_with_names(tree)
+    arrays = {f"a{i}": np.asarray(x) for i, x in enumerate(flat)}
+    import io
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    data = buf.getvalue()
+    path = os.path.join(root, f"ckpt_{step:010d}.npz")
+    _atomic_write(path, data)
+    meta = {"step": step, "crc": zlib.crc32(data), "n_arrays": len(flat)}
+    _atomic_write(path + ".json", json.dumps(meta).encode())
+    # rolling window
+    ckpts = sorted(p for p in os.listdir(root)
+                   if p.startswith("ckpt_") and p.endswith(".npz"))
+    for old in ckpts[:-keep_last]:
+        os.remove(os.path.join(root, old))
+        meta_p = os.path.join(root, old + ".json")
+        if os.path.exists(meta_p):
+            os.remove(meta_p)
+    return path
+
+
+def load_array_checkpoint(root: str, tree_like: Any,
+                          step: int | None = None) -> tuple[Any, int]:
+    """Restore the latest (or given-step) checkpoint into tree_like's
+    structure. Verifies CRC; skips corrupt checkpoints and falls back to
+    the previous one (fault tolerance on restore)."""
+    ckpts = sorted(p for p in os.listdir(root)
+                   if p.startswith("ckpt_") and p.endswith(".npz"))
+    if step is not None:
+        ckpts = [p for p in ckpts if p == f"ckpt_{step:010d}.npz"]
+    if not ckpts:
+        raise FileNotFoundError(f"no checkpoints under {root}")
+    for name in reversed(ckpts):
+        path = os.path.join(root, name)
+        try:
+            with open(path, "rb") as f:
+                data = f.read()
+            with open(path + ".json") as f:
+                meta = json.load(f)
+            if zlib.crc32(data) != meta["crc"]:
+                continue  # corrupt; try the previous one
+            import io
+            loaded = np.load(io.BytesIO(data))
+            flat, treedef = jax.tree_util.tree_flatten(tree_like)
+            restored = [loaded[f"a{i}"] for i in range(len(flat))]
+            return jax.tree_util.tree_unflatten(treedef, restored), \
+                meta["step"]
+        except (IOError, KeyError):
+            continue
+    raise IOError(f"all checkpoints under {root} are corrupt")

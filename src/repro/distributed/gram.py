@@ -1,0 +1,199 @@
+"""Distributed all-pairs Gram computation.
+
+Two-level parallelism on the production mesh (DESIGN.md §4):
+
+* the PAIR axis (embarrassingly parallel, paper Sec. V-B) shards over every
+  non-"model" mesh axis — ("pod", "data") on the multi-pod mesh;
+* the MODEL axis parallelizes *within* a pair by sharding graph-1's node
+  dimension — the rows of the nm x nm product system. CG dot products then
+  reduce over sharded rows; GSPMD inserts the all-reduces (this is the
+  collective-bound regime the §Roofline table quantifies).
+
+Fault tolerance: the driver walks a SchedulePlan, persists every finished
+PairBlock to a ChunkStore (atomic, CRC, first-writer-wins) and on restart
+recomputes only missing blocks. Elasticity: replan() on the remaining
+blocks whenever the device count changes between rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.base_kernels import BaseKernel, Constant
+from repro.core.graph import GraphBatch
+from repro.core.mgk import MGKResult, mgk_pairs
+from repro.data.loader import BucketedDataset, PairBlock, pair_blocks
+from .checkpoint import ChunkStore
+from .scheduler import SchedulePlan, make_plan, replan
+
+__all__ = ["gram_pair_step", "solve_pair_block", "GramDriver",
+           "pair_shardings"]
+
+
+def pair_shardings(mesh: Mesh) -> tuple:
+    """(in_shardings for (g1, g2), out_shardings for MGKResult).
+
+    g1's node dimension rides the "model" axis (rows of the product
+    system); g2 is replicated over "model". The pair/batch axis shards over
+    all remaining mesh axes.
+    """
+    batch_axes = tuple(a for a in mesh.axis_names if a != "model")
+    model = "model" if "model" in mesh.axis_names else None
+    b = batch_axes if batch_axes else None
+
+    def ns(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    g1_shard = GraphBatch(
+        adjacency=ns(b, model, None),
+        edge_labels=ns(b, model, None),
+        vertex_labels=ns(b, model),
+        start_prob=ns(b, model),
+        stop_prob=ns(b, model),
+        degrees=ns(b, model),
+        node_mask=ns(b, model),
+        n_nodes=ns(b),
+    )
+    g2_shard = GraphBatch(
+        adjacency=ns(b, None, None),
+        edge_labels=ns(b, None, None),
+        vertex_labels=ns(b, None),
+        start_prob=ns(b, None),
+        stop_prob=ns(b, None),
+        degrees=ns(b, None),
+        node_mask=ns(b, None),
+        n_nodes=ns(b),
+    )
+    out_shard = MGKResult(values=ns(b), iterations=ns(b), converged=ns(b),
+                          nodal=None)
+    return (g1_shard, g2_shard), out_shard
+
+
+def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
+                   edge_kernel: BaseKernel, *, method: str = "lowrank",
+                   tol: float = 1e-8, max_iter: int = 256) -> Callable:
+    """Build the jitted sharded pair-solve step for a mesh."""
+    (g1_s, g2_s), out_s = pair_shardings(mesh)
+
+    def step(g1: GraphBatch, g2: GraphBatch) -> MGKResult:
+        res = mgk_pairs(g1, g2, vertex_kernel, edge_kernel, method=method,
+                        tol=tol, max_iter=max_iter)
+        return MGKResult(values=res.values, iterations=res.iterations,
+                         converged=res.converged, nodal=None)
+
+    return jax.jit(step, in_shardings=(g1_s, g2_s), out_shardings=out_s)
+
+
+def _pad_batch(gb: GraphBatch, to: int) -> GraphBatch:
+    """Pad the pair axis to a multiple of the data-parallel width with
+    self-decoupled dummy pairs (mask 0, degree 1)."""
+    B = gb.adjacency.shape[0]
+    if B == to:
+        return gb
+    pad = to - B
+
+    def pad_leaf(x, fill=0.0):
+        shape = (pad,) + x.shape[1:]
+        return jnp.concatenate([x, jnp.full(shape, fill, x.dtype)])
+
+    return GraphBatch(
+        adjacency=pad_leaf(gb.adjacency),
+        edge_labels=pad_leaf(gb.edge_labels),
+        vertex_labels=pad_leaf(gb.vertex_labels),
+        start_prob=pad_leaf(gb.start_prob),
+        stop_prob=pad_leaf(gb.stop_prob),
+        degrees=pad_leaf(gb.degrees, 1.0),
+        node_mask=pad_leaf(gb.node_mask),
+        n_nodes=pad_leaf(gb.n_nodes),
+    )
+
+
+def solve_pair_block(ds: BucketedDataset, block: PairBlock, step: Callable,
+                     pair_width: int) -> dict[str, np.ndarray]:
+    """Run one PairBlock through the sharded step; returns host arrays."""
+    g1 = ds.batch(block.rows, pad_to=block.pad_row)
+    g2 = ds.batch(block.cols, pad_to=block.pad_col)
+    B = block.n_pairs
+    to = -(-B // pair_width) * pair_width
+    res = step(_pad_batch(g1, to), _pad_batch(g2, to))
+    return {
+        "rows": np.asarray(block.rows),
+        "cols": np.asarray(block.cols),
+        "values": np.asarray(res.values)[:B],
+        "iterations": np.asarray(res.iterations)[:B],
+    }
+
+
+@dataclasses.dataclass
+class GramDriver:
+    """End-to-end fault-tolerant all-pairs driver.
+
+    Usage:
+        driver = GramDriver(ds, mesh, vertex_kernel, edge_kernel, store)
+        gram = driver.run()            # resumable; returns [N, N] matrix
+    """
+    ds: BucketedDataset
+    mesh: Mesh
+    vertex_kernel: BaseKernel = Constant(1.0)
+    edge_kernel: BaseKernel = Constant(1.0)
+    store: ChunkStore | None = None
+    method: str = "lowrank"
+    tol: float = 1e-8
+    max_iter: int = 256
+    pairs_per_block: int = 64
+    normalize: bool = True
+
+    def blocks(self) -> list[PairBlock]:
+        return list(pair_blocks(self.ds, self.pairs_per_block))
+
+    def plan(self, blocks: list[PairBlock] | None = None) -> SchedulePlan:
+        blocks = blocks if blocks is not None else self.blocks()
+        done = self.store.done_blocks() if self.store else set()
+        n_groups = max(
+            1, self.mesh.devices.size // self._pair_width())
+        return replan(blocks, done, n_groups)
+
+    def _pair_width(self) -> int:
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        w = 1
+        for a, s in sizes.items():
+            if a != "model":
+                w *= s
+        return w
+
+    def run(self, progress: Callable[[int, int], None] | None = None
+            ) -> np.ndarray:
+        step = gram_pair_step(self.mesh, self.vertex_kernel,
+                              self.edge_kernel, method=self.method,
+                              tol=self.tol, max_iter=self.max_iter)
+        blocks = self.blocks()
+        by_id = {b.block_id: b for b in blocks}
+        done = self.store.done_blocks() if self.store else set()
+        todo = [b.block_id for b in blocks if b.block_id not in done]
+        width = self._pair_width()
+        results: dict[int, dict] = {}
+        for i, bid in enumerate(todo):
+            out = solve_pair_block(self.ds, by_id[bid], step, width)
+            if self.store:
+                self.store.save_block(bid, **out)
+            else:
+                results[bid] = out
+            if progress:
+                progress(i + 1, len(todo))
+        n = len(self.ds)
+        if self.store:
+            return self.store.assemble_gram(n, normalize=self.normalize)
+        K = np.full((n, n), np.nan)
+        for out in results.values():
+            K[out["rows"], out["cols"]] = out["values"]
+            K[out["cols"], out["rows"]] = out["values"]
+        if self.normalize:
+            d = np.sqrt(np.diag(K))
+            K = K / d[:, None] / d[None, :]
+        return K

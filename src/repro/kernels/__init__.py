@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the compute hot-spots (DESIGN.md §2).
+
+  xmv_dense           the paper's tiling & blocking on-the-fly Kronecker XMV
+  xmv_block_sparse    inter-tile-sparse octile XMV (scalar prefetch)
+  flash_attention     streaming attention for the LM zoo
+  ops                 jit'd dispatch wrappers (auto-interpret off-TPU)
+  ref                 pure-jnp oracles for all of the above
+"""
+from . import ops, ref
+from .flash_attention import flash_attention
+from .xmv_block_sparse import TilePack, pack_graph, pack_octiles, \
+    xmv_block_sparse
+from .xmv_dense import pick_tiles, xmv_dense, xmv_dense_batched
+
+__all__ = [
+    "ops", "ref", "flash_attention", "TilePack", "pack_graph",
+    "pack_octiles", "xmv_block_sparse", "pick_tiles", "xmv_dense",
+    "xmv_dense_batched",
+]

@@ -1,0 +1,116 @@
+"""Tiled online-softmax (flash) attention for the LM zoo.
+
+DESIGN.md §5: this kernel exists because the paper's central idea — stream
+operand tiles and regenerate a bandwidth-heavy product on the fly instead of
+materializing it in HBM — is exactly the flash-attention trick. The tiling
+structure mirrors kernels/xmv_dense.py: grid (batch, head, q_block,
+kv_block) with the kv_block reduction innermost, VMEM scratch accumulators,
+and masking instead of divergent control flow.
+
+Supports causal masking, sliding windows (gemma3 local layers) and GQA
+(kv head indexing by query-head group). Validated against
+kernels/ref.py:attention_ref in interpret mode; the LM models select it via
+``attention_impl="pallas"`` (default "reference" so CPU dry-runs lower
+without TPU-only ops).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, causal, window, blk_q, blk_k, n_kv_blocks):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)      # [blk_q, d]
+    k = k_ref[0, 0].astype(jnp.float32)      # [blk_k, d]
+    v = v_ref[0, 0].astype(jnp.float32)      # [blk_k, d]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    pos_q = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (blk_q, blk_k), 0)
+    pos_k = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (blk_q, blk_k), 1)
+    mask = jnp.ones((blk_q, blk_k), jnp.bool_)
+    if causal:
+        mask &= pos_k <= pos_q
+    if window is not None:
+        mask &= pos_k > pos_q - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                      # [blk_q, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)           # [blk_q, 1]
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "blk_q", "blk_k",
+                     "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    scale: float | None = None, blk_q: int = 128,
+                    blk_k: int = 128, interpret: bool | None = None):
+    """q: [B, Hq, S, D]; k, v: [B, Hkv, S, D] with Hq % Hkv == 0."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    blk_q = min(blk_q, S)
+    blk_k = min(blk_k, S)
+    if S % blk_q or S % blk_k:
+        raise ValueError(f"S={S} must be divisible by blocks {blk_q},{blk_k}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_kv_blocks = S // blk_k
+    grid = (B, Hq, S // blk_q, n_kv_blocks)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          blk_q=blk_q, blk_k=blk_k,
+                          n_kv_blocks=n_kv_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, blk_k, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, blk_k, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, D), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

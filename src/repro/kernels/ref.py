@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each Pallas kernel's tests sweep shapes and dtypes and assert_allclose
+against these references (interpret=True on CPU)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["xmv_ref", "xmv_batched_ref", "attention_ref"]
+
+
+def xmv_ref(A, E, Ap, Ep, P, edge_kernel):
+    """y[i,k] = sum_{j,l} A[i,j] Ap[k,l] kappa(E[i,j], Ep[k,l]) P[j,l].
+
+    Full O(n^2 m^2) materialization — ground truth for the on-the-fly
+    kernels (identical to core.xmv.xmv_full, re-exported here so the
+    kernels package is self-contained)."""
+    K = edge_kernel(E[:, :, None, None], Ep[None, None, :, :])
+    W = A[:, :, None, None] * Ap[None, None, :, :] * K
+    return jnp.einsum("ijkl,jl->ik", W, P)
+
+
+def xmv_batched_ref(A, E, Ap, Ep, P, edge_kernel):
+    import jax
+    return jax.vmap(lambda a, e, ap, ep, p:
+                    xmv_ref(a, e, ap, ep, p, edge_kernel))(A, E, Ap, Ep, P)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None,
+                  window: int | None = None):
+    """Plain softmax attention oracle: q,k,v [B, H, S, D] -> [B, H, S, D]."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    s = q.shape[-2]
+    pos_q = jnp.arange(s)[:, None]
+    pos_k = jnp.arange(k.shape[-2])[None, :]
+    mask = jnp.ones((s, k.shape[-2]), bool)
+    if causal:
+        mask &= pos_k <= pos_q
+    if window is not None:
+        mask &= pos_k > pos_q - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", w.astype(v.dtype), v)

@@ -1,0 +1,123 @@
+"""Dense on-the-fly Kronecker XMV — the paper's *tiling & blocking*
+primitive (Sec. III-C / Appendix F), re-tiled for the TPU memory hierarchy.
+
+Mapping from the CUDA kernel (DESIGN.md §2):
+
+  CUDA                                  TPU (this kernel)
+  ------------------------------------  --------------------------------
+  t x t octile staged in shared memory  (TI x TJ) / (TIP x TJP) BlockSpec
+                                        blocks staged in VMEM, double-
+                                        buffered by the Pallas pipeline
+  length-r register chunks              VREG-resident 4D broadcast tile
+  warp lanes over product rows          VPU lanes over the (TIP, TJP) axes
+  out block revisit via grid order      reduction grid dims innermost,
+                                        @pl.when zero-init at step 0
+
+For every output block y[I:I+TI, K:K+TIP] the kernel streams the J, L
+contraction blocks of (A, E) and (A', E'), regenerates the product weights
+    w = A[i,j] * A'[k,l] * kappa_e(E[i,j], E'[k,l])
+in VMEM/VREGs (never in HBM — the paper's core idea), multiplies by the
+P[j,l] block and accumulates. Arithmetic intensity grows with the tile
+footprint exactly as the paper's Table I: global traffic per output block
+is O((E+2F)/TILE^2) of the naive kernel's.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["xmv_dense", "xmv_dense_batched", "pick_tiles"]
+
+
+def _kernel(a_ref, e_ref, ap_ref, ep_ref, p_ref, o_ref, *, edge_kernel,
+            acc_dtype):
+    """One grid step: o[TI, TIP] += contract((A,E) TIxTJ, (A',E') TIPxTJP,
+    P TJxTJP)."""
+    j, l = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(jnp.logical_and(j == 0, l == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(acc_dtype)      # [TI, TJ]
+    e = e_ref[...]                        # [TI, TJ]
+    ap = ap_ref[...].astype(acc_dtype)    # [TIP, TJP]
+    ep = ep_ref[...]                      # [TIP, TJP]
+    p = p_ref[...].astype(acc_dtype)      # [TJ, TJP]
+    # regenerate the product-matrix block on the fly: [TI, TJ, TIP, TJP]
+    kappa = edge_kernel(e[:, :, None, None],
+                        ep[None, None, :, :]).astype(acc_dtype)
+    w = a[:, :, None, None] * ap[None, None, :, :] * kappa
+    contrib = jnp.sum(w * p[None, :, None, :], axis=(1, 3))   # [TI, TIP]
+    o_ref[...] += contrib.astype(o_ref.dtype)
+
+
+def _divisor_tile(dim: int, target: int, quantum: int = 8) -> int:
+    """Largest multiple of ``quantum`` that divides ``dim`` and is <= target
+    (falls back to dim itself for small inputs)."""
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -quantum):
+        if cand % quantum == 0 and dim % cand == 0:
+            return cand
+    return quantum if dim % quantum == 0 else dim
+
+
+def pick_tiles(n: int, m: int) -> tuple[int, int, int, int]:
+    """Tile-size policy (see EXPERIMENTS.md §Perf for its derivation).
+
+    VMEM budget: the 4D regeneration tile TI*TJ*TIP*TJP*4B must stay well
+    under VMEM (~16 MB less pipeline buffers). TJP rides the 128-lane axis;
+    TI*TJ*TIP*TJP = 8*16*8*128 = 128K elements = 512 KB f32 by default.
+    """
+    ti = _divisor_tile(n, 8)
+    tj = _divisor_tile(n, 16)
+    tip = _divisor_tile(m, 8)
+    tjp = _divisor_tile(m, 128)
+    return ti, tj, tip, tjp
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("edge_kernel", "tiles", "interpret", "acc_dtype"))
+def xmv_dense(A, E, Ap, Ep, P, edge_kernel, *, tiles=None, interpret=None,
+              acc_dtype=jnp.float32):
+    """Single-pair on-the-fly XMV. A,E: [n,n]; Ap,Ep: [m,m]; P: [n,m]."""
+    n, m = A.shape[0], Ap.shape[0]
+    if tiles is None:
+        tiles = pick_tiles(n, m)
+    ti, tj, tip, tjp = tiles
+    if n % ti or n % tj or m % tip or m % tjp:
+        raise ValueError(f"tiles {tiles} must divide shapes n={n}, m={m}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid = (n // ti, m // tip, n // tj, m // tjp)
+    out = pl.pallas_call(
+        functools.partial(_kernel, edge_kernel=edge_kernel,
+                          acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ti, tj), lambda i, k, j, l: (i, j)),
+            pl.BlockSpec((ti, tj), lambda i, k, j, l: (i, j)),
+            pl.BlockSpec((tip, tjp), lambda i, k, j, l: (k, l)),
+            pl.BlockSpec((tip, tjp), lambda i, k, j, l: (k, l)),
+            pl.BlockSpec((tj, tjp), lambda i, k, j, l: (j, l)),
+        ],
+        out_specs=pl.BlockSpec((ti, tip), lambda i, k, j, l: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((n, m), P.dtype),
+        interpret=interpret,
+    )(A, E, Ap, Ep, P)
+    return out
+
+
+def xmv_dense_batched(A, E, Ap, Ep, P, edge_kernel, *, tiles=None,
+                      interpret=None):
+    """Batched over pairs: leading axis B on every operand (the TPU
+    analogue of 'many graph pairs per kernel launch', paper Sec. V)."""
+    fn = functools.partial(xmv_dense, edge_kernel=edge_kernel, tiles=tiles,
+                           interpret=interpret)
+    return jax.vmap(lambda a, e, ap, ep, p: fn(a, e, ap, ep, p))(
+        A, E, Ap, Ep, P)

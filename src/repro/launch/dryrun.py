@@ -1,0 +1,496 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against ShapeDtypeStruct inputs (no allocation), print
+memory_analysis / cost_analysis, and extract the collective schedule for
+the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+The two lines above MUST stay the first statements of this module: jax
+locks the device count at first initialization, and the dry-run needs 512
+host placeholder devices. Do not import this module from tests that need
+the real device count.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+"""
+import argparse
+import functools
+import json
+import re
+import sys
+import time
+import traceback
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, ShapeCell, skip_reason
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import batch_specs
+from repro.configs.sharding import (batch_shardings, cache_shardings,
+                                    batch_axes_for, logits_sharding,
+                                    param_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import abstract_cache, abstract_params
+from repro.train.optimizer import make_optimizer
+from repro.train.steps import loss_fn, make_decode_step, make_prefill_step
+
+# v5e hardware constants (per chip) — see EXPERIMENTS.md §Roofline
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+                "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4,
+                "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUP_RE2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _result_bytes(line: str) -> int:
+    """Byte size of the result shape on an HLO instruction line (handles
+    tuple-shaped results by summing components)."""
+    head = line.split("=", 1)[0] if "=" in line else line
+    # shapes appear right after '=': take the segment before the opcode
+    rhs = line.split("=", 1)[1] if "=" in line else line
+    op_pos = min((rhs.find(c) for c in _COLLECTIVES if c in rhs),
+                 default=-1)
+    seg = rhs[:op_pos] if op_pos > 0 else rhs
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(seg):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    del head
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUP_RE2.search(line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device link-bytes per collective type, ring-algorithm model:
+      all-reduce:          2 * B * (g-1)/g      (B = result bytes)
+      all-gather:              B * (g-1)/g
+      reduce-scatter:          B * (g-1)        (result is the shard)
+      all-to-all:              B * (g-1)/g
+      collective-permute:      B
+    """
+    stats = {c: {"count": 0, "bytes": 0.0, "link_bytes": 0.0}
+             for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        l = line.strip()
+        if "=" not in l:
+            continue
+        opcode_part = l.split("=", 1)[1]
+        for c in _COLLECTIVES:
+            # match opcode tokens like 'all-reduce(' / 'all-gather-start('
+            if re.search(rf"\b{c}(-start)?\(", opcode_part):
+                b = _result_bytes(l)
+                g = _group_size(l)
+                if c == "all-reduce":
+                    lb = 2 * b * (g - 1) / max(g, 1)
+                elif c == "reduce-scatter":
+                    lb = b * (g - 1)
+                elif c == "collective-permute":
+                    lb = b
+                else:
+                    lb = b * (g - 1) / max(g, 1)
+                stats[c]["count"] += 1
+                stats[c]["bytes"] += b
+                stats[c]["link_bytes"] += lb
+                break
+    stats["total_link_bytes"] = sum(
+        v["link_bytes"] for k, v in stats.items() if isinstance(v, dict))
+    return stats
+
+
+def sharded_bytes(abstract, shardings) -> float:
+    """Per-device bytes of a pytree under the given shardings (fallback /
+    cross-check for memory_analysis)."""
+    total = 0.0
+    flat_a = jax.tree.leaves(abstract)
+    flat_s = jax.tree.leaves(shardings,
+                             is_leaf=lambda x: isinstance(x, NamedSharding))
+    for a, s in zip(flat_a, flat_s):
+        size = np.prod(a.shape) * a.dtype.itemsize if a.shape else \
+            a.dtype.itemsize
+        shards = 1
+        for dim, ax in enumerate(s.spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            for one in axes:
+                shards *= s.mesh.shape[one]
+        total += size / shards
+    return total
+
+
+# ---------------------------------------------------------------------------
+# per-cell step builders
+# ---------------------------------------------------------------------------
+
+def _opt_shardings(pspecs, opt_abstract, mesh: Mesh):
+    """Optimizer state shardings inheriting the parameter specs
+    (ZeRO-1: state shards wherever the param shards)."""
+    pdef = jax.tree_util.tree_structure(
+        jax.tree.map(lambda x: 0, pspecs,
+                     is_leaf=lambda x: isinstance(x, NamedSharding)))
+    flat_p = jax.tree.leaves(
+        pspecs, is_leaf=lambda x: isinstance(x, NamedSharding))
+
+    def like(ps: NamedSharding, sub):
+        spec = ps.spec
+
+        def leaf_spec(leaf):
+            nd = len(leaf.shape)
+            if nd == len(spec):
+                return NamedSharding(mesh, spec)
+            if nd == len(spec) - 1:      # factored row stat / quant scale
+                return NamedSharding(mesh, P(*spec[:-1]))
+            return NamedSharding(mesh, P())
+        return jax.tree.map(leaf_spec, sub)
+
+    def build(opt_sub):
+        flat_o = pdef.flatten_up_to(opt_sub)
+        return jax.tree_util.tree_unflatten(
+            pdef, [like(ps, o) for ps, o in zip(flat_p, flat_o)])
+
+    from repro.train.optimizer import OptState
+    return OptState(step=NamedSharding(mesh, P()),
+                    m=build(opt_abstract.m), v=build(opt_abstract.v))
+
+
+def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh):
+    """Returns (fn, args_abstract, in_shardings, out_shardings,
+    donate_argnums)."""
+    params_a = abstract_params(cfg)
+    pspecs = param_specs(cfg, params_a, mesh)
+    bspecs = batch_shardings(cfg, cell, mesh)
+    batch_a = batch_specs(cfg, cell)
+
+    if cell.kind == "train":
+        opt_init, opt_update = make_optimizer(cfg.optimizer)
+
+        def train_step(params, opt_state, batch):
+            grads, metrics = jax.grad(
+                functools.partial(loss_fn, cfg), has_aux=True)(params, batch)
+            new_params, new_opt = opt_update(grads, opt_state, params)
+            return new_params, new_opt, metrics
+
+        opt_a = jax.eval_shape(opt_init, params_a)
+        ospecs = _opt_shardings(pspecs, opt_a, mesh)
+        mspec = {"nll": NamedSharding(mesh, P()),
+                 "aux": NamedSharding(mesh, P()),
+                 "loss": NamedSharding(mesh, P())}
+        if cfg.mtp_heads:
+            mspec["mtp_nll"] = NamedSharding(mesh, P())
+        return (train_step, (params_a, opt_a, batch_a),
+                (pspecs, ospecs, bspecs), (pspecs, ospecs, mspec), (0, 1))
+
+    if cell.kind == "prefill":
+        cache_a = abstract_cache(cfg, cell.global_batch, cell.seq_len)
+        cspecs = cache_shardings(cfg, cell, mesh, cache_a)
+        step = make_prefill_step(cfg)
+        lspec = logits_sharding(cfg, cell, mesh)
+        # output cache shapes can differ from input (cross-kv memory len):
+        out_cache_a = jax.eval_shape(step, params_a, batch_a, cache_a)[1]
+        out_cspecs = cache_shardings(cfg, cell, mesh, out_cache_a)
+        return (step, (params_a, batch_a, cache_a),
+                (pspecs, bspecs, cspecs), (lspec, out_cspecs), (2,))
+
+    if cell.kind == "decode":
+        cache_a = abstract_cache(cfg, cell.global_batch, cell.seq_len)
+        cspecs = cache_shardings(cfg, cell, mesh, cache_a)
+        step = make_decode_step(cfg)
+        b = batch_axes_for(mesh, cell.global_batch)
+        token_a = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)
+        tspec = NamedSharding(mesh, P(b, None))
+        lspec = logits_sharding(cfg, cell, mesh)
+        return (step, (params_a, cache_a, token_a),
+                (pspecs, cspecs, tspec), (lspec, cspecs), (1,))
+
+    raise ValueError(cell.kind)
+
+
+# -- the paper's own workload on the production mesh -------------------------
+
+def build_gram_cell(mesh: Mesh, variant: str = "baseline",
+                    n_pairs: int = 512, nodes: int = 128):
+    """The MGK Gram pair-step (paper technique) as a dry-run cell: pairs
+    shard over pod x data, product-system rows over model.
+
+    Variants (§Perf cell C):
+      faithful      paper-faithful on-the-fly elementwise XMV (Alg. 2)
+      baseline      beyond-paper rank-12 MXU sandwich XMV
+      rank8 / rank6 truncated feature rank (documented error <=1e-4/1e-3)
+      b2048         4x pair batch per step (amortizes fixed work)
+    CG runs a fixed-48-iteration scan (visible to the static profile;
+    production buckets solve in lockstep anyway).
+    """
+    from repro.core.base_kernels import KroneckerDelta, SquareExponential
+    from repro.core.graph import GraphBatch
+    from repro.core.mgk import mgk_pairs
+    from repro.distributed.gram import pair_shardings
+
+    method = "lowrank"
+    rank = 12
+    for part in variant.split("+"):
+        if part == "faithful":
+            method = "elementwise"
+        elif part.startswith("rank"):
+            rank = int(part[4:])
+        elif part == "b2048":
+            n_pairs = 2048
+        elif part in ("baseline", ""):
+            pass
+        else:
+            raise ValueError(f"unknown gram variant {part!r}")
+
+    B, n = n_pairs, nodes
+    f32 = jnp.float32
+
+    def gb_abstract():
+        return GraphBatch(
+            adjacency=jax.ShapeDtypeStruct((B, n, n), f32),
+            edge_labels=jax.ShapeDtypeStruct((B, n, n), f32),
+            vertex_labels=jax.ShapeDtypeStruct((B, n), f32),
+            start_prob=jax.ShapeDtypeStruct((B, n), f32),
+            stop_prob=jax.ShapeDtypeStruct((B, n), f32),
+            degrees=jax.ShapeDtypeStruct((B, n), f32),
+            node_mask=jax.ShapeDtypeStruct((B, n), f32),
+            n_nodes=jax.ShapeDtypeStruct((B,), jnp.int32),
+        )
+
+    (g1_s, g2_s), out_s = pair_shardings(mesh)
+    vk = KroneckerDelta(0.5, n_labels=8)
+    ek = SquareExponential(1.0, rank=rank)
+
+    def step(g1, g2):
+        res = mgk_pairs(g1, g2, vk, ek, method=method, tol=1e-8,
+                        max_iter=64, fixed_iters=48)
+        return res.values, res.iterations
+
+    vals_s = NamedSharding(mesh, out_s.values.spec)
+    return (step, (gb_abstract(), gb_abstract()), (g1_s, g2_s),
+            (vals_s, vals_s), ())
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """6*N*D (train) / 2*N*D (inference) with N = active params."""
+    n_active = cfg.n_active_params()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    tokens = cell.global_batch * 1
+    return 2.0 * n_active * tokens
+
+
+def apply_variant(cfg: ModelConfig, variant: str) -> ModelConfig:
+    """§Perf variants: named config transforms layered onto an arch.
+    Multiple transforms combine with '+' (e.g. 'chunked+remat_dots')."""
+    import dataclasses
+    for part in variant.split("+"):
+        if part in ("baseline", "faithful_elementwise", "opt", "") or \
+                part.startswith(("moe_", "label")):
+            continue   # code-level variants: label only
+        if part == "chunked":
+            cfg = dataclasses.replace(cfg, attention_impl="chunked")
+        elif part == "remat_dots":
+            cfg = dataclasses.replace(cfg, remat="dots")
+        elif part == "remat_none":
+            cfg = dataclasses.replace(cfg, remat="none")
+        elif part == "fsdp":
+            cfg = dataclasses.replace(cfg, fsdp=True)
+        elif part == "adafactor":
+            cfg = dataclasses.replace(cfg, optimizer="adafactor")
+        elif part == "adamw8bit":
+            cfg = dataclasses.replace(cfg, optimizer="adamw8bit")
+        else:
+            raise ValueError(f"unknown variant part {part!r}")
+    return cfg
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             variant: str = "baseline") -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    rec: dict = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                 "variant": variant,
+                 "mesh_shape": dict(zip(mesh.axis_names,
+                                        mesh.devices.shape)),
+                 "n_devices": int(mesh.devices.size)}
+    t0 = time.time()
+    if arch == "mgk-gram":
+        fn, args, in_s, out_s, donate = build_gram_cell(mesh, variant)
+        rec["n_params"] = 0
+        cell = None
+    else:
+        cfg = apply_variant(ARCHS[arch], variant)
+        cell = SHAPES[shape]
+        reason = skip_reason(cfg, cell)
+        if reason:
+            rec["status"] = "skipped"
+            rec["skip_reason"] = reason
+            return rec
+        fn, args, in_s, out_s, donate = build_cell(cfg, cell, mesh)
+        rec["n_params"] = cfg.n_params()
+        rec["n_active_params"] = cfg.n_active_params()
+        rec["model_flops"] = model_flops(cfg, cell)
+
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_s, out_shardings=out_s,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        # ---- memory ----
+        try:
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                rec["memory_analysis"] = {
+                    k: int(getattr(ma, k)) for k in
+                    ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes")
+                    if hasattr(ma, k)}
+        except Exception as e:  # CPU backend may not implement it
+            rec["memory_analysis_error"] = str(e)
+        rec["arg_bytes_per_device"] = sharded_bytes(args, in_s)
+
+        # ---- flops / bytes ----
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            rec["cost_analysis"] = {
+                k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and
+                k in ("flops", "bytes accessed", "bytes accessed output",
+                      "optimal_seconds", "utilization operand 0 {}")}
+            rec["hlo_flops"] = float(ca.get("flops", -1.0))
+            rec["hlo_bytes"] = float(ca.get("bytes accessed", -1.0))
+        except Exception as e:
+            rec["cost_analysis_error"] = str(e)
+
+        # ---- collectives + loop-trip-corrected static profile ----
+        try:
+            txt = compiled.as_text()
+        except Exception:
+            txt = lowered.as_text()
+        rec["collectives"] = collective_stats(txt)
+        rec["hlo_lines"] = txt.count("\n")
+        from repro.analysis import analyze_hlo
+        hc = analyze_hlo(txt)
+        rec["corrected"] = {
+            "flops": hc.flops,
+            "hbm_bytes": hc.hbm_bytes,
+            "total_link_bytes": hc.total_link_bytes,
+            "collectives": hc.collectives,
+            "n_while": hc.n_while,
+            "unknown_trip_loops": hc.unknown_trip_loops,
+        }
+
+    # ---- roofline terms (per device), from the LOOP-CORRECTED profile ----
+    # (raw cost_analysis counts while bodies once; see analysis/hlo_cost.py)
+    link_bytes = rec["corrected"]["total_link_bytes"]
+    flops = rec["corrected"]["flops"]
+    hbm_bytes = rec["corrected"]["hbm_bytes"]
+    rec["roofline"] = {
+        "compute_s": flops / PEAK_FLOPS_BF16,
+        "memory_s": hbm_bytes / HBM_BW,
+        "collective_s": link_bytes / ICI_BW,
+    }
+    dom = max(rec["roofline"], key=rec["roofline"].get)
+    rec["roofline"]["dominant"] = dom
+    if arch != "mgk-gram" and rec.get("model_flops"):
+        total_hlo = flops * rec["n_devices"]
+        rec["roofline"]["model_flops_ratio"] = (
+            rec["model_flops"] / total_hlo if total_hlo > 0 else None)
+    rec["status"] = "ok"
+    return rec
+
+
+def all_cells() -> list[tuple[str, str]]:
+    cells = [(a, s) for a in ARCHS for s in SHAPES]
+    cells.append(("mgk-gram", "gram_block"))
+    return cells
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args(argv)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            name = f"{arch}__{shape}__{mk}__{args.variant}"
+            path = os.path.join(args.out, name + ".json")
+            if os.path.exists(path):
+                print(f"[skip existing] {name}")
+                continue
+            print(f"[dryrun] {name} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape, mk, args.variant)
+            except Exception:
+                rec = {"arch": arch, "shape": shape, "mesh": mk,
+                       "variant": args.variant, "status": "error",
+                       "error": traceback.format_exc()}
+                failures += 1
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            status = rec.get("status")
+            ro = rec.get("roofline", {})
+            print(f"  -> {status} compile={rec.get('compile_s')}s "
+                  f"dominant={ro.get('dominant')} "
+                  f"compute={ro.get('compute_s', 0):.2e}s "
+                  f"memory={ro.get('memory_s', 0):.2e}s "
+                  f"collective={ro.get('collective_s', 0):.2e}s",
+                  flush=True)
+    print(f"done; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

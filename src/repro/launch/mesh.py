@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax use;
+smoke tests and benchmarks must keep seeing the real single CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod v5e 16x16 (256 chips) or 2-pod 2x16x16 (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1):
+    """Whatever devices exist locally, as a (data, model) mesh — used by
+    the runnable examples and tests on CPU."""
+    n = len(jax.devices())
+    if n % model_axis:
+        raise ValueError(f"{n} devices not divisible by model={model_axis}")
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

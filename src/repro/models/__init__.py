@@ -1,0 +1,5 @@
+"""Architecture zoo: composable JAX model definitions for the 10 assigned
+architectures (dense / MoE / MLA / SSM / hybrid / VLM / enc-dec audio)."""
+from .model import init_params, abstract_params, forward, Model
+
+__all__ = ["init_params", "abstract_params", "forward", "Model"]

@@ -1,0 +1,170 @@
+"""Shared transformer building blocks (functional; params = nested dicts).
+
+All layers support two modes:
+  * full-sequence (train / prefill): x [B, S, d]; returns cache if asked;
+  * decode: x [B, 1, d] + cache (k/v [B, S_max, kv, hd]) + position index.
+
+Shape convention for attention internals: [B, H, S, D] (head-major) to
+match kernels/flash_attention.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import attention
+
+__all__ = ["rms_norm", "rope", "swiglu", "AttnParams", "attn_init",
+           "attention_layer", "KVCache", "mlp_init", "embed_init"]
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + weight)).astype(dtype)
+
+
+def _rotate_half(x):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([-x2, x1], axis=-1)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """x: [B, H, S, D]; positions: [B, S] (or [S])."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # B,1,S,D/2
+    cos = jnp.concatenate([jnp.cos(ang)] * 2, axis=-1)
+    sin = jnp.concatenate([jnp.sin(ang)] * 2, axis=-1)
+    return (x * cos + _rotate_half(x) * sin).astype(x.dtype)
+
+
+# -- initializers -------------------------------------------------------------
+
+def _dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = fan_in ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * d ** -0.5).astype(dtype)
+
+
+def mlp_init(key, d: int, ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(k1, (d, ff), dtype),
+        "w_up": _dense_init(k2, (d, ff), dtype),
+        "w_down": _dense_init(k3, (ff, d), dtype),
+    }
+
+
+def swiglu(params, x):
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+
+
+# -- attention ----------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray   # [B, S_max, KV, HD]
+    v: jnp.ndarray   # [B, S_max, KV, HD]
+
+
+class AttnParams(NamedTuple):
+    wq: jnp.ndarray       # [d, H*HD]
+    wk: jnp.ndarray       # [d, KV*HD]
+    wv: jnp.ndarray       # [d, KV*HD]
+    wo: jnp.ndarray       # [H*HD, d]
+    q_norm: jnp.ndarray | None
+    k_norm: jnp.ndarray | None
+
+
+def attn_init(key, d: int, n_heads: int, n_kv: int, head_dim: int, dtype,
+              qk_norm: bool = False) -> AttnParams:
+    ks = jax.random.split(key, 4)
+    return AttnParams(
+        wq=_dense_init(ks[0], (d, n_heads * head_dim), dtype),
+        wk=_dense_init(ks[1], (d, n_kv * head_dim), dtype),
+        wv=_dense_init(ks[2], (d, n_kv * head_dim), dtype),
+        wo=_dense_init(ks[3], (n_heads * head_dim, d), dtype),
+        q_norm=jnp.zeros((head_dim,), dtype) if qk_norm else None,
+        k_norm=jnp.zeros((head_dim,), dtype) if qk_norm else None,
+    )
+
+
+def _split_heads(x, n, hd):
+    B, S, _ = x.shape
+    return x.reshape(B, S, n, hd).transpose(0, 2, 1, 3)   # [B, n, S, hd]
+
+
+def attention_layer(p: AttnParams, x, *, n_heads: int, n_kv: int,
+                    head_dim: int, positions, rope_theta: float | None,
+                    causal: bool = True, window: int | None = None,
+                    cache: KVCache | None = None,
+                    cache_pos=None,
+                    impl: str = "reference",
+                    rms_eps: float = 1e-6,
+                    kv_override=None):
+    """GQA attention. Returns (out [B,S,d], new_cache | None).
+
+    * train/prefill: cache=None or a zeroed cache to fill (prefill).
+    * decode: x is [B,1,d]; cache holds S_max history; cache_pos the write
+      index (scalar int32).
+    * cross-attention: pass kv_override = (k_in [B,Skv,d_src] already
+      projected? no: raw source states) — here kv_override is the source
+      sequence [B, S_kv, d]; keys/values are projected from it and cache
+      semantics don't apply.
+    """
+    B, S, _ = x.shape
+    q = _split_heads(jnp.einsum("bsd,dh->bsh", x, p.wq), n_heads, head_dim)
+    kv_src = kv_override if kv_override is not None else x
+    k = _split_heads(jnp.einsum("bsd,dh->bsh", kv_src, p.wk), n_kv, head_dim)
+    v = _split_heads(jnp.einsum("bsd,dh->bsh", kv_src, p.wv), n_kv, head_dim)
+    if p.q_norm is not None:
+        q = rms_norm(q, p.q_norm, rms_eps)
+        k = rms_norm(k, p.k_norm, rms_eps)
+    if rope_theta is not None and kv_override is None:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+
+    new_cache = None
+    if cache is not None and kv_override is None:
+        # write current k/v into the cache at cache_pos
+        k_bsnh = k.transpose(0, 2, 1, 3)      # [B, S, KV, HD]
+        v_bsnh = v.transpose(0, 2, 1, 3)
+        start = cache_pos if cache_pos is not None else 0
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k_bsnh.astype(cache.k.dtype), (0, start, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v_bsnh.astype(cache.v.dtype), (0, start, 0, 0))
+        new_cache = KVCache(ck, cv)
+        if S == 1:
+            # decode: attend over the whole cache, GQA-native (no repeat /
+            # transpose copies of the cache — those dominate HBM traffic)
+            rep = n_heads // n_kv
+            q_r = q[:, :, 0, :].reshape(B, n_kv, rep, head_dim)
+            logits = jnp.einsum("bgrd,bsgd->bgrs", q_r,
+                                ck.astype(q.dtype)) * head_dim ** -0.5
+            kpos = jnp.arange(ck.shape[1])
+            mask = kpos[None, None, None, :] <= start
+            if window is not None:
+                mask &= kpos[None, None, None, :] > start - window
+            logits = jnp.where(mask, logits.astype(jnp.float32), -1e30)
+            w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+            out = jnp.einsum("bgrs,bsgd->bgrd", w, cv.astype(q.dtype))
+            out = out.reshape(B, 1, n_heads * head_dim)
+            return jnp.einsum("bsh,hd->bsd", out, p.wo), new_cache
+
+    out = attention(q, k, v, impl=impl,
+                    causal=causal and kv_override is None, window=window)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return jnp.einsum("bsh,hd->bsd", out, p.wo), new_cache

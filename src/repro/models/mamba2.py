@@ -1,0 +1,191 @@
+"""Mamba-2 block via the SSD (state-space duality) chunked algorithm
+(arXiv:2405.21060) plus O(1)-state decode.
+
+Train/prefill: the sequence is cut into chunks of length Q; within-chunk
+terms use the dual quadratic (attention-like) form with the 1-semiseparable
+decay mask; chunk states are passed through a jax.lax.scan recurrence
+(linear in sequence length). Decode: constant-size state update — the
+reason mamba2/jamba are the only two archs that run the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from .layers import rms_norm
+
+__all__ = ["MambaParams", "MambaCache", "mamba_init", "mamba_layer",
+           "mamba_decode"]
+
+
+class MambaParams(NamedTuple):
+    in_proj: jnp.ndarray    # [d, 2*d_in + 2*state + H]
+    conv_w: jnp.ndarray     # [width, conv_dim]
+    conv_b: jnp.ndarray     # [conv_dim]
+    dt_bias: jnp.ndarray    # [H]
+    A_log: jnp.ndarray      # [H]
+    D: jnp.ndarray          # [H]
+    norm_w: jnp.ndarray     # [d_in]
+    out_proj: jnp.ndarray   # [d_in, d]
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray       # [B, width-1, conv_dim]
+    state: jnp.ndarray      # [B, H, P, N]
+
+
+def _dims(d: int, cfg: SSMConfig):
+    d_in = cfg.expand * d
+    n_heads = d_in // cfg.head_dim
+    conv_dim = d_in + 2 * cfg.d_state
+    return d_in, n_heads, conv_dim
+
+
+def mamba_init(key, d: int, cfg: SSMConfig, dtype) -> MambaParams:
+    d_in, H, conv_dim = _dims(d, cfg)
+    ks = jax.random.split(key, 4)
+    return MambaParams(
+        in_proj=(jax.random.normal(ks[0], (d, 2 * d_in + 2 * cfg.d_state + H))
+                 * d ** -0.5).astype(dtype),
+        conv_w=(jax.random.normal(ks[1], (cfg.conv_width, conv_dim))
+                * cfg.conv_width ** -0.5).astype(dtype),
+        conv_b=jnp.zeros((conv_dim,), dtype),
+        dt_bias=jnp.zeros((H,), jnp.float32),
+        A_log=jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        D=jnp.ones((H,), jnp.float32),
+        norm_w=jnp.zeros((d_in,), dtype),
+        out_proj=(jax.random.normal(ks[3], (d_in, d))
+                  * d_in ** -0.5).astype(dtype),
+    )
+
+
+def _causal_conv(x, w, b, cache=None):
+    """Depthwise causal conv. x: [B, S, C]; w: [W, C]. Returns (y, tail)."""
+    W = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)           # [B, S+W-1, C]
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W)) + b
+    tail = xp[:, -(W - 1):, :]
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), tail
+
+
+def _ssd_chunked(xh, a, Bm, Cm, chunk: int):
+    """SSD scan. xh: [B,S,H,P] (already dt-scaled); a: [B,S,H] log-decay;
+    Bm, Cm: [B,S,N]. Returns y [B,S,H,P] and final state [B,H,P,N]."""
+    B, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S) if S % chunk else chunk
+    if S % Q:
+        # pad to a chunk multiple with inert steps: x=0, B=0 contribute
+        # nothing; a=0 (decay 1) keeps the final state exact
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_orig = S
+    S = xh.shape[1]
+    nc = S // Q
+    xh = xh.reshape(B, nc, Q, H, Pd)
+    a = a.reshape(B, nc, Q, H)
+    Bm = Bm.reshape(B, nc, Q, N)
+    Cm = Cm.reshape(B, nc, Q, N)
+
+    cum = jnp.cumsum(a, axis=2)                      # [B,nc,Q,H]
+    # intra-chunk (dual quadratic form): L[i,j] = exp(cum_i - cum_j), i>=j
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,nc,Q,Q,H]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask the EXPONENT (not the result): exp on the i<j branch overflows
+    # and its inf would leak NaN through where()'s gradient
+    rel = jnp.where(tri[None, None, :, :, None], rel, -jnp.inf)
+    L = jnp.exp(rel)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cm, Bm)   # [B,nc,Q,Q]
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores,
+                         L.astype(xh.dtype), xh)
+
+    # per-chunk input state contribution
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,Q,H]
+    S_c = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                     Bm, decay_to_end.astype(xh.dtype), xh)
+
+    chunk_decay = jnp.exp(cum[:, :, -1, :])          # [B,nc,H]
+
+    def scan_fn(carry, inp):
+        s_c, dec = inp                               # [B,H,P,N], [B,H]
+        new = carry * dec[:, :, None, None].astype(carry.dtype) + s_c
+        return new, carry                            # emit state BEFORE chunk
+
+    init = jnp.zeros((B, H, Pd, N), xh.dtype)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (S_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N]
+
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                         Cm, jnp.exp(cum).astype(xh.dtype), prev_states)
+    y = (y_intra + y_inter).reshape(B, S, H, Pd)[:, :S_orig]
+    return y, final
+
+
+def _project(p: MambaParams, x, cfg: SSMConfig):
+    d_in, H, conv_dim = _dims(x.shape[-1], cfg)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p.in_proj)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + conv_dim]
+    dt_raw = zxbcdt[..., d_in + conv_dim:]
+    return z, xbc, dt_raw, (d_in, H, conv_dim)
+
+
+def mamba_layer(p: MambaParams, x, cfg: SSMConfig, *, cache=None):
+    """Full-sequence SSD. Returns (out [B,S,d], MambaCache for decode)."""
+    Bsz, S, d = x.shape
+    z, xbc, dt_raw, (d_in, H, conv_dim) = _project(p, x, cfg)
+    xbc, conv_tail = _causal_conv(xbc, p.conv_w, p.conv_b)
+    xs = xbc[..., :d_in]
+    Bm = xbc[..., d_in:d_in + cfg.d_state]
+    Cm = xbc[..., d_in + cfg.d_state:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias)  # [B,S,H]
+    A = -jnp.exp(p.A_log)                                          # [H]
+    a = dt * A[None, None, :]                                      # log decay
+    xh = xs.reshape(Bsz, S, H, cfg.head_dim)
+    xh_dt = xh * dt[..., None].astype(xh.dtype)
+    y, final_state = _ssd_chunked(xh_dt, a, Bm, Cm, cfg.chunk)
+    y = y + p.D[None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(Bsz, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p.norm_w)
+    out = jnp.einsum("bsk,kd->bsd", y, p.out_proj)
+    new_cache = MambaCache(conv=conv_tail, state=final_state) \
+        if cache is not None else None
+    return out, new_cache
+
+
+def mamba_decode(p: MambaParams, x, cfg: SSMConfig, cache: MambaCache):
+    """One-token step. x: [B, 1, d]. Returns (out [B,1,d], new cache)."""
+    Bsz, S, d = x.shape
+    assert S == 1
+    z, xbc, dt_raw, (d_in, H, conv_dim) = _project(p, x, cfg)
+    xbc, conv_tail = _causal_conv(xbc, p.conv_w, p.conv_b, cache=cache.conv)
+    xs = xbc[..., :d_in]
+    Bm = xbc[..., d_in:d_in + cfg.d_state][:, 0]     # [B, N]
+    Cm = xbc[..., d_in + cfg.d_state:][:, 0]         # [B, N]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p.dt_bias)[:, 0]
+    A = -jnp.exp(p.A_log)
+    decay = jnp.exp(dt * A[None, :])                 # [B, H]
+    xh = xs.reshape(Bsz, H, cfg.head_dim)            # [B, H, P]
+    xh_dt = xh * dt[..., None].astype(xh.dtype)
+    state = cache.state * decay[:, :, None, None].astype(cache.state.dtype)
+    state = state + jnp.einsum("bn,bhp->bhpn", Bm, xh_dt)
+    y = jnp.einsum("bn,bhpn->bhp", Cm, state)        # [B, H, P]
+    y = y + p.D[None, :, None].astype(y.dtype) * xh
+    y = y.reshape(Bsz, 1, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p.norm_w)
+    out = jnp.einsum("bsk,kd->bsd", y, p.out_proj)
+    return out, MambaCache(conv=conv_tail, state=state)

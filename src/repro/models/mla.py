@@ -1,0 +1,117 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Queries and keys/values are produced through low-rank latent projections;
+the KV cache stores only the compressed latent (kv_lora_rank) plus the
+shared rope key — the architecture's memory saving. Decode here is the
+"naive" (un-absorbed) form: cached latents are up-projected each step.
+The absorbed-matmul variant is a §Perf hillclimb (launch/dryrun --variant
+mla_absorbed) — see EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.kernels.ops import attention
+from .layers import rms_norm, rope
+
+__all__ = ["MLAParams", "MLACache", "mla_init", "mla_layer"]
+
+
+class MLAParams(NamedTuple):
+    w_dq: jnp.ndarray       # [d, q_lora]
+    q_norm: jnp.ndarray     # [q_lora]
+    w_uq: jnp.ndarray       # [q_lora, H*(nope+rope)]
+    w_dkv: jnp.ndarray      # [d, kv_lora + rope]
+    kv_norm: jnp.ndarray    # [kv_lora]
+    w_uk: jnp.ndarray       # [kv_lora, H*nope]
+    w_uv: jnp.ndarray       # [kv_lora, H*v_dim]
+    wo: jnp.ndarray         # [H*v_dim, d]
+
+
+class MLACache(NamedTuple):
+    ckv: jnp.ndarray        # [B, S_max, kv_lora]   compressed latents
+    krope: jnp.ndarray      # [B, S_max, rope_dim]  shared rope key
+
+
+def mla_init(key, d: int, n_heads: int, cfg: MLAConfig, dtype) -> MLAParams:
+    ks = jax.random.split(key, 6)
+    qh = cfg.qk_nope_dim + cfg.qk_rope_dim
+
+    def init(k, shape):
+        return (jax.random.normal(k, shape) * shape[0] ** -0.5).astype(dtype)
+
+    return MLAParams(
+        w_dq=init(ks[0], (d, cfg.q_lora_rank)),
+        q_norm=jnp.zeros((cfg.q_lora_rank,), dtype),
+        w_uq=init(ks[1], (cfg.q_lora_rank, n_heads * qh)),
+        w_dkv=init(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim)),
+        kv_norm=jnp.zeros((cfg.kv_lora_rank,), dtype),
+        w_uk=init(ks[3], (cfg.kv_lora_rank, n_heads * cfg.qk_nope_dim)),
+        w_uv=init(ks[4], (cfg.kv_lora_rank, n_heads * cfg.v_head_dim)),
+        wo=init(ks[5], (n_heads * cfg.v_head_dim, d)),
+    )
+
+
+def mla_layer(p: MLAParams, x, cfg: MLAConfig, *, n_heads: int, positions,
+              rope_theta: float, impl: str = "reference",
+              cache: MLACache | None = None, cache_pos=None,
+              rms_eps: float = 1e-6):
+    """Returns (out [B,S,d], new_cache | None)."""
+    B, S, _ = x.shape
+    nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p.w_dq), p.q_norm, rms_eps)
+    q = jnp.einsum("bsr,rh->bsh", cq, p.w_uq).reshape(
+        B, S, n_heads, nope + rdim).transpose(0, 2, 1, 3)  # [B,H,S,nope+r]
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, rope_theta)
+
+    dkv = jnp.einsum("bsd,dr->bsr", x, p.w_dkv)
+    ckv = rms_norm(dkv[..., :cfg.kv_lora_rank], p.kv_norm, rms_eps)
+    krope_new = rope(dkv[..., None, :, cfg.kv_lora_rank:].swapaxes(1, 2)
+                     .reshape(B, 1, S, rdim), positions, rope_theta)
+    krope_new = krope_new[:, 0]                             # [B, S, rdim]
+
+    new_cache = None
+    if cache is not None:
+        start = cache_pos if cache_pos is not None else 0
+        cckv = jax.lax.dynamic_update_slice(
+            cache.ckv, ckv.astype(cache.ckv.dtype), (0, start, 0))
+        ckr = jax.lax.dynamic_update_slice(
+            cache.krope, krope_new.astype(cache.krope.dtype), (0, start, 0))
+        new_cache = MLACache(cckv, ckr)
+        ckv_all, krope_all = cckv.astype(x.dtype), ckr.astype(x.dtype)
+    else:
+        ckv_all, krope_all = ckv, krope_new
+
+    k_nope = jnp.einsum("bsr,rh->bsh", ckv_all, p.w_uk).reshape(
+        B, -1, n_heads, nope).transpose(0, 2, 1, 3)         # [B,H,Sk,nope]
+    v = jnp.einsum("bsr,rh->bsh", ckv_all, p.w_uv).reshape(
+        B, -1, n_heads, vdim).transpose(0, 2, 1, 3)         # [B,H,Sk,vdim]
+    k_rope = jnp.broadcast_to(krope_all[:, None],
+                              (B, n_heads) + krope_all.shape[1:])
+
+    scale = (nope + rdim) ** -0.5
+    if cache is not None and S == 1:
+        start = cache_pos
+        logits = (jnp.einsum("bhqd,bhkd->bhqk", q_nope, k_nope) +
+                  jnp.einsum("bhqd,bhkd->bhqk", q_rope, k_rope)) * scale
+        kpos = jnp.arange(k_nope.shape[2])
+        mask = kpos[None, None, None, :] <= start
+        logits = jnp.where(mask, logits.astype(jnp.float32), -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bhkd->bhqd", w, v)
+    else:
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kfull = jnp.concatenate([k_nope, k_rope], axis=-1)
+        # pad v to qk head size for the shared attention kernel, then slice
+        out = attention(qfull, kfull,
+                        jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                    (0, nope + rdim - vdim))),
+                        impl=impl, causal=True, scale=scale)[..., :vdim]
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, n_heads * vdim)
+    return jnp.einsum("bsh,hd->bsd", out, p.wo), new_cache

@@ -1,0 +1,486 @@
+"""Unified model assembly for the architecture zoo.
+
+Every architecture is described as a list of SEGMENTS; a segment is
+``(n_super, pattern)`` where ``pattern`` is a list of (mixer, mlp) layer
+kinds forming one "superblock". The segment runs as ``jax.lax.scan`` over
+``n_super`` stacked superblocks (remat-wrapped in training), which keeps
+the HLO size O(pattern) instead of O(n_layers) — essential for compiling
+the 100-layer configs on the 512-device dry-run mesh.
+
+  mixer: attn | attn_local | attn_global | enc_attn | cross | dec
+         | mla | mamba
+  mlp:   dense | moe | none
+
+Examples:
+  qwen3-14b        [(40, [(attn, dense)])]
+  gemma3-12b       [(8,  [(attn_local, dense)]*5 + [(attn_global, dense)])]
+  deepseek-v3      [(3,  [(mla, dense)]), (58, [(mla, moe)])]
+  jamba-1.5        [(9,  [(attn, dense), (mamba, moe), (mamba, dense), ...])]
+  whisper (dec)    [(32, [(dec, dense)])]   # dec = self + cross + mlp
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import (AttnParams, KVCache, attention_layer, attn_init,
+                     embed_init, mlp_init, rms_norm, swiglu)
+from .mamba2 import (MambaCache, mamba_decode, mamba_init, mamba_layer)
+from .mla import MLACache, mla_init, mla_layer
+from .moe import moe_init, moe_layer
+
+__all__ = ["Model", "init_params", "abstract_params", "forward",
+           "segments_of", "init_cache", "abstract_cache"]
+
+Segment = tuple[int, list[tuple[str, str]]]
+
+
+# ---------------------------------------------------------------------------
+# architecture plan
+# ---------------------------------------------------------------------------
+
+def segments_of(cfg: ModelConfig, part: str = "decoder") -> list[Segment]:
+    if part == "encoder":
+        assert cfg.encoder_layers
+        return [(cfg.encoder_layers, [("enc_attn", "dense")])]
+    if cfg.family == "audio":
+        return [(cfg.n_layers, [("dec", "dense")])]
+    if cfg.family == "ssm":
+        return [(cfg.n_layers, [("mamba", "none")])]
+    if cfg.attn_every:                                   # jamba-style hybrid
+        pat = []
+        for j in range(cfg.attn_every):
+            mixer = "attn" if j == 0 else "mamba"
+            mlp = "moe" if (cfg.moe and
+                            j % cfg.moe.moe_every == cfg.moe.moe_every - 1) \
+                else "dense"
+            pat.append((mixer, mlp))
+        assert cfg.n_layers % cfg.attn_every == 0
+        return [(cfg.n_layers // cfg.attn_every, pat)]
+    if cfg.local_global_ratio:                           # gemma3
+        r = cfg.local_global_ratio
+        pat = [("attn_local", "dense")] * r + [("attn_global", "dense")]
+        assert cfg.n_layers % (r + 1) == 0
+        return [(cfg.n_layers // (r + 1), pat)]
+    if cfg.cross_attn_every:                             # llama-vision
+        c = cfg.cross_attn_every
+        pat = [("attn", "dense")] * (c - 1) + [("cross", "dense")]
+        assert cfg.n_layers % c == 0
+        return [(cfg.n_layers // c, pat)]
+    mlp = "moe" if cfg.moe else "dense"
+    segs: list[Segment] = []
+    if cfg.n_dense_layers:                               # deepseek-v3
+        mixer = "mla" if cfg.mla else "attn"
+        segs.append((cfg.n_dense_layers, [(mixer, "dense")]))
+        segs.append((cfg.n_layers - cfg.n_dense_layers, [(mixer, mlp)]))
+        return segs
+    mixer = "mla" if cfg.mla else "attn"
+    return [(cfg.n_layers, [(mixer, mlp)])]
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, mixer: str, mlp: str) -> dict:
+    d, dt = cfg.d_model, jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"norm1": jnp.zeros((d,), dt)}
+    if mixer in ("attn", "attn_local", "attn_global", "enc_attn"):
+        p["attn"] = attn_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim, dt, qk_norm=cfg.qk_norm)
+    elif mixer == "cross":
+        p["cross"] = attn_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, dt)
+        p["cross_gate"] = jnp.zeros((), dt)
+    elif mixer == "dec":
+        p["attn"] = attn_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim, dt)
+        p["cross"] = attn_init(ks[1], d, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, dt)
+        p["norm_cross"] = jnp.zeros((d,), dt)
+    elif mixer == "mla":
+        p["mla"] = mla_init(ks[0], d, cfg.n_heads, cfg.mla, dt)
+    elif mixer == "mamba":
+        p["mamba"] = mamba_init(ks[0], d, cfg.ssm, dt)
+    else:
+        raise ValueError(mixer)
+    if mlp != "none":
+        p["norm2"] = jnp.zeros((d,), dt)
+        if mlp == "dense":
+            p["mlp"] = mlp_init(ks[2], d, cfg.d_ff, dt)
+        else:
+            p["moe"] = moe_init(ks[2], d, cfg.moe, dt)
+    return p
+
+
+def _segment_init(key, cfg: ModelConfig, seg: Segment) -> dict:
+    n_super, pattern = seg
+    out = {}
+    for j, (mixer, mlp) in enumerate(pattern):
+        keys = jax.random.split(jax.random.fold_in(key, j), n_super)
+        stacked = jax.vmap(
+            lambda k: _layer_init(k, cfg, mixer, mlp))(keys)
+        out[f"l{j}"] = stacked
+    return out
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_padded, cfg.d_model, dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(ks[1], cfg.vocab_padded,
+                                       cfg.d_model, dt)
+    for i, seg in enumerate(segments_of(cfg)):
+        params[f"seg{i}"] = _segment_init(jax.random.fold_in(ks[2], i),
+                                          cfg, seg)
+    if cfg.encoder_layers:
+        for i, seg in enumerate(segments_of(cfg, "encoder")):
+            params[f"enc_seg{i}"] = _segment_init(
+                jax.random.fold_in(ks[3], i), cfg, seg)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), dt)
+    if cfg.mtp_heads:
+        params["mtp"] = {
+            "proj": (jax.random.normal(ks[4], (2 * cfg.d_model, cfg.d_model))
+                     * (2 * cfg.d_model) ** -0.5).astype(dt),
+            "norm": jnp.zeros((cfg.d_model,), dt),
+            "layer": _layer_init(ks[5], cfg, "mla" if cfg.mla else "attn",
+                                 "moe" if cfg.moe else "dense"),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# caches (for decode)
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, mixer: str, batch: int, s_max: int,
+                 dtype) -> Any:
+    if mixer in ("attn", "attn_local", "attn_global"):
+        shape = (batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+        return {"kv": KVCache(jnp.zeros(shape, dtype),
+                              jnp.zeros(shape, dtype))}
+    if mixer == "dec":
+        shape = (batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+        cshape = (batch, cfg.vision_tokens or 1500, cfg.n_kv_heads,
+                  cfg.head_dim)
+        return {"kv": KVCache(jnp.zeros(shape, dtype),
+                              jnp.zeros(shape, dtype)),
+                "cross_kv": KVCache(jnp.zeros(cshape, dtype),
+                                    jnp.zeros(cshape, dtype))}
+    if mixer == "cross":
+        cshape = (batch, cfg.vision_tokens, cfg.n_kv_heads, cfg.head_dim)
+        return {"cross_kv": KVCache(jnp.zeros(cshape, dtype),
+                                    jnp.zeros(cshape, dtype))}
+    if mixer == "mla":
+        c = cfg.mla
+        return {"mla": MLACache(
+            jnp.zeros((batch, s_max, c.kv_lora_rank), dtype),
+            jnp.zeros((batch, s_max, c.qk_rope_dim), dtype))}
+    if mixer == "mamba":
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        h = d_in // s.head_dim
+        conv_dim = d_in + 2 * s.d_state
+        return {"mamba": MambaCache(
+            jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+            jnp.zeros((batch, h, s.head_dim, s.d_state), dtype))}
+    raise ValueError(mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               dtype=None) -> dict:
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    for i, (n_super, pattern) in enumerate(segments_of(cfg)):
+        seg: dict[str, Any] = {}
+        for j, (mixer, _) in enumerate(pattern):
+            one = _layer_cache(cfg, mixer, batch, s_max, dtype)
+            seg[f"l{j}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n_super,) + x.shape),
+                one)
+        cache[f"seg{i}"] = seg
+    return cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=None):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, s_max, dtype))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _apply_layer(cfg: ModelConfig, lp: dict, x, mixer: str, mlp: str, *,
+                 positions, memory, lcache, cache_pos, decode: bool):
+    """One (mixer, mlp) layer with pre-norms and residuals.
+    Returns (x, new_lcache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, lp["norm1"], cfg.rms_eps)
+    new_lcache = dict(lcache) if lcache is not None else None
+
+    def kv(name):
+        return lcache[name] if lcache is not None else None
+
+    if mixer in ("attn", "attn_local", "attn_global"):
+        window = cfg.sliding_window if mixer == "attn_local" else None
+        out, nc = attention_layer(
+            lp["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, positions=positions,
+            rope_theta=cfg.rope_theta, causal=True, window=window,
+            cache=kv("kv"), cache_pos=cache_pos,
+            impl=cfg.attention_impl, rms_eps=cfg.rms_eps)
+        if new_lcache is not None:
+            new_lcache["kv"] = nc
+        x = x + out
+    elif mixer == "enc_attn":
+        out, _ = attention_layer(
+            lp["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, positions=positions, rope_theta=None,
+            causal=False, impl=cfg.attention_impl, rms_eps=cfg.rms_eps)
+        x = x + out
+    elif mixer == "cross":
+        if decode:
+            out = _cross_from_cache(cfg, lp["cross"], h, lcache["cross_kv"])
+            nc = lcache["cross_kv"]
+        else:
+            out, nc = _cross_full(cfg, lp["cross"], h, memory,
+                                  want_cache=lcache is not None)
+        if new_lcache is not None:
+            new_lcache["cross_kv"] = nc
+        x = x + jnp.tanh(lp["cross_gate"].astype(jnp.float32)).astype(
+            x.dtype) * out
+    elif mixer == "dec":
+        out, nc = attention_layer(
+            lp["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, positions=positions,
+            rope_theta=cfg.rope_theta, causal=True,
+            cache=kv("kv"), cache_pos=cache_pos,
+            impl=cfg.attention_impl, rms_eps=cfg.rms_eps)
+        if new_lcache is not None:
+            new_lcache["kv"] = nc
+        x = x + out
+        h2 = rms_norm(x, lp["norm_cross"], cfg.rms_eps)
+        if decode:
+            out = _cross_from_cache(cfg, lp["cross"], h2, lcache["cross_kv"])
+        else:
+            out, nc2 = _cross_full(cfg, lp["cross"], h2, memory,
+                                   want_cache=lcache is not None)
+            if new_lcache is not None:
+                new_lcache["cross_kv"] = nc2
+        x = x + out
+    elif mixer == "mla":
+        out, nc = mla_layer(
+            lp["mla"], h, cfg.mla, n_heads=cfg.n_heads, positions=positions,
+            rope_theta=cfg.rope_theta, impl=cfg.attention_impl,
+            cache=lcache["mla"] if lcache is not None else None,
+            cache_pos=cache_pos, rms_eps=cfg.rms_eps)
+        if new_lcache is not None:
+            new_lcache["mla"] = nc
+        x = x + out
+    elif mixer == "mamba":
+        if decode:
+            out, nc = mamba_decode(lp["mamba"], h, cfg.ssm,
+                                   cache=lcache["mamba"])
+        else:
+            out, nc = mamba_layer(lp["mamba"], h, cfg.ssm,
+                                  cache=lcache["mamba"]
+                                  if lcache is not None else None)
+        if new_lcache is not None:
+            new_lcache["mamba"] = nc
+        x = x + out
+    else:
+        raise ValueError(mixer)
+
+    if mlp == "dense":
+        x = x + swiglu(lp["mlp"], rms_norm(x, lp["norm2"], cfg.rms_eps))
+    elif mlp == "moe":
+        out, a = moe_layer(lp["moe"], rms_norm(x, lp["norm2"], cfg.rms_eps),
+                           cfg.moe)
+        x = x + out
+        aux = aux + a
+    return x, new_lcache, aux
+
+
+def _cross_full(cfg: ModelConfig, p: AttnParams, h, memory, want_cache):
+    """Cross-attention over memory [B, V, d]; optionally returns the
+    projected cross-KV (built once at prefill, read-only at decode)."""
+    B = h.shape[0]
+    out, _ = attention_layer(
+        p, h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, positions=None, rope_theta=None,
+        causal=False, impl=cfg.attention_impl, kv_override=memory)
+    nc = None
+    if want_cache:
+        k = jnp.einsum("bvd,dh->bvh", memory, p.wk).reshape(
+            B, memory.shape[1], cfg.n_kv_heads, cfg.head_dim)
+        v = jnp.einsum("bvd,dh->bvh", memory, p.wv).reshape(
+            B, memory.shape[1], cfg.n_kv_heads, cfg.head_dim)
+        nc = KVCache(k, v)
+    return out, nc
+
+
+def _cross_from_cache(cfg: ModelConfig, p: AttnParams, h, ckv: KVCache):
+    """Decode-time cross-attention against pre-projected memory KV
+    (GQA-native einsums; no repeat/transpose copies of the memory)."""
+    B, S, _ = h.shape
+    rep = cfg.n_heads // cfg.n_kv_heads
+    q = jnp.einsum("bsd,dh->bsh", h, p.wq).reshape(
+        B, S, cfg.n_kv_heads, rep, cfg.head_dim)
+    logits = jnp.einsum("bsgrd,bvgd->bsgrv", q, ckv.k.astype(q.dtype))
+    logits = logits * cfg.head_dim ** -0.5
+    w = jax.nn.softmax(logits.astype(jnp.float32), -1).astype(q.dtype)
+    out = jnp.einsum("bsgrv,bvgd->bsgrd", w, ckv.v.astype(q.dtype))
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p.wo)
+
+
+def _run_segments(cfg: ModelConfig, params, x, *, prefix: str, part: str,
+                  positions, memory, cache, cache_pos, decode: bool,
+                  training: bool):
+    """Apply all segments; returns (x, new_cache, aux_total)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: dict[str, Any] = {}
+    for i, (n_super, pattern) in enumerate(segments_of(cfg, part)):
+        seg_params = params[f"{prefix}seg{i}"]
+        seg_cache = cache.get(f"seg{i}") if cache is not None else None
+
+        def superblock(carry, xs):
+            x, aux = carry
+            sp, sc = xs
+            nsc = {} if sc is not None else None
+            for j, (mixer, mlp) in enumerate(pattern):
+                lc = sc[f"l{j}"] if sc is not None else None
+                x, nlc, a = _apply_layer(
+                    cfg, sp[f"l{j}"], x, mixer, mlp, positions=positions,
+                    memory=memory, lcache=lc, cache_pos=cache_pos,
+                    decode=decode)
+                if nsc is not None:
+                    nsc[f"l{j}"] = nlc
+                aux = aux + a
+            return (x, aux), nsc
+
+        body = superblock
+        if training and cfg.remat != "none":
+            policy = None
+            if cfg.remat == "dots":
+                policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            body = jax.checkpoint(superblock, policy=policy,
+                                  prevent_cse=False)
+
+        (x, aux_total), seg_cache_out = jax.lax.scan(
+            body, (x, aux_total), (seg_params, seg_cache))
+        if cache is not None:
+            new_cache[f"seg{i}"] = seg_cache_out
+    return x, (new_cache if cache is not None else None), aux_total
+
+
+def _sinusoidal(s: int, d: int, dtype):
+    pos = jnp.arange(s)[:, None].astype(jnp.float32)
+    dim = jnp.arange(0, d, 2)[None, :].astype(jnp.float32)
+    ang = pos / (10_000.0 ** (dim / d))
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe.astype(dtype)
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """Whisper-style encoder over stub frame embeddings [B, S_enc, d]."""
+    x = frames + _sinusoidal(frames.shape[1], cfg.d_model, frames.dtype)
+    pos = jnp.arange(frames.shape[1])
+    x, _, _ = _run_segments(cfg, params, x, prefix="enc_", part="encoder",
+                            positions=pos, memory=None, cache=None,
+                            cache_pos=None, decode=False, training=False)
+    return rms_norm(x, params["enc_norm"], cfg.rms_eps)
+
+
+def forward(cfg: ModelConfig, params, batch: dict, *, training: bool = False,
+            cache: dict | None = None, return_hidden: bool = False):
+    """Full-sequence forward (train / prefill).
+
+    batch keys: "tokens" [B, S] int32; optional "vision" [B, V, d] (vlm),
+    "audio_frames" [B, S_enc, d] (audio). Returns (logits, new_cache, aux)
+    or (..., hidden) with return_hidden.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    memory = None
+    if cfg.family == "vlm":
+        memory = batch["vision"]
+    elif cfg.family == "audio":
+        memory = encode(cfg, params, batch["audio_frames"])
+    positions = jnp.arange(S)
+    cache_pos = 0 if cache is not None else None
+    x, new_cache, aux = _run_segments(
+        cfg, params, x, prefix="", part="decoder", positions=positions,
+        memory=memory, cache=cache, cache_pos=cache_pos, decode=False,
+        training=training)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head)
+    if new_cache is not None:
+        new_cache["pos"] = jnp.asarray(S, jnp.int32)
+    if return_hidden:
+        return logits, new_cache, aux, x
+    return logits, new_cache, aux
+
+
+def decode_step(cfg: ModelConfig, params, cache: dict, token):
+    """One decode step. token: [B, 1] int32. Returns (logits, new_cache)."""
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], token, axis=0)
+    positions = jnp.full((token.shape[0], 1), pos, jnp.int32)
+    x, new_cache, _ = _run_segments(
+        cfg, params, x, prefix="", part="decoder", positions=positions,
+        memory=None, cache=cache, cache_pos=pos, decode=True,
+        training=False)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+def mtp_logits(cfg: ModelConfig, params, hidden, next_embed):
+    """DeepSeek multi-token-prediction head: predict token t+2 from the
+    final hidden state combined with the embedding of token t+1."""
+    h = jnp.concatenate([hidden, next_embed], axis=-1)
+    h = jnp.einsum("bsd,dk->bsk", h, params["mtp"]["proj"])
+    h = rms_norm(h, params["mtp"]["norm"], cfg.rms_eps)
+    h, _, _ = _apply_layer(
+        cfg, params["mtp"]["layer"], h, "mla" if cfg.mla else "attn",
+        "moe" if cfg.moe else "dense",
+        positions=jnp.arange(h.shape[1]), memory=None, lcache=None,
+        cache_pos=None, decode=False)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,vd->bsv", h, head)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Thin OO wrapper tying a config to the functional API."""
+    cfg: ModelConfig
+
+    def init(self, key):
+        return init_params(self.cfg, key)
+
+    def apply(self, params, batch, **kw):
+        return forward(self.cfg, params, batch, **kw)
+
+    def decode(self, params, cache, token):
+        return decode_step(self.cfg, params, cache, token)

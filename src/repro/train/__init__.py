@@ -1,0 +1,8 @@
+"""Training substrate: optimizers (AdamW / 8-bit AdamW / Adafactor),
+loss, train/serve step builders with remat + grad accumulation."""
+from .optimizer import OptState, make_optimizer
+from .steps import make_train_step, make_prefill_step, make_decode_step, \
+    loss_fn
+
+__all__ = ["OptState", "make_optimizer", "make_train_step",
+           "make_prefill_step", "make_decode_step", "loss_fn"]

@@ -1,0 +1,155 @@
+"""Optimizers, optax-free, with distributed-memory tricks built in:
+
+* ``adamw``      — fp32 moments (baseline).
+* ``adamw8bit``  — int8-quantized moments with per-tensor-row absmax
+                   scales: 4x less optimizer HBM and 4x less ZeRO-1
+                   all-gather traffic (the "gradient/state compression"
+                   knob for 1000+-node runs).
+* ``adafactor``  — factored second moment (row+col statistics) for >=2D
+                   tensors: O(n+m) state instead of O(nm); the default for
+                   the 671B config where even sharded Adam does not fit.
+
+Optimizer state inherits the parameter sharding (ZeRO-1 when cfg.fsdp
+shards params over "data"). Global-norm clipping included.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptState", "make_optimizer"]
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any        # first moment  (pytree or quantized pytree)
+    v: Any        # second moment (pytree / factored / quantized)
+
+
+class _Quant(NamedTuple):
+    q: jnp.ndarray        # int8 payload
+    scale: jnp.ndarray    # per-row absmax scale (f32)
+
+
+def _quantize(x: jnp.ndarray) -> _Quant:
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return _Quant(q=q, scale=scale.astype(jnp.float32))
+
+
+def _dequantize(qt: _Quant) -> jnp.ndarray:
+    return qt.q.astype(jnp.float32) * qt.scale
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def make_optimizer(kind: str = "adamw", *, lr: float = 3e-4,
+                   b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                   weight_decay: float = 0.1, clip_norm: float = 1.0,
+                   warmup_steps: int = 0):
+    """Returns (init_fn(params) -> OptState,
+                update_fn(grads, state, params) -> (new_params, new_state)).
+
+    ``warmup_steps`` linearly ramps the learning rate from 0 (standard
+    transformer warmup; prevents the early-step divergence observed in
+    the 100M example run)."""
+
+    def init(params) -> OptState:
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)  # noqa: E731
+        if kind == "adamw":
+            return OptState(jnp.zeros((), jnp.int32),
+                            jax.tree.map(zeros, params),
+                            jax.tree.map(zeros, params))
+        if kind == "adamw8bit":
+            qz = lambda p: _quantize(jnp.zeros_like(p, jnp.float32))  # noqa
+            return OptState(jnp.zeros((), jnp.int32),
+                            jax.tree.map(qz, params),
+                            jax.tree.map(qz, params))
+        if kind == "adafactor":
+            def vz(p):
+                if p.ndim >= 2:
+                    return (jnp.zeros(p.shape[:-1], jnp.float32),
+                            jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                      jnp.float32))
+                return jnp.zeros_like(p, jnp.float32)
+            m = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.bfloat16),
+                             params)
+            return OptState(jnp.zeros((), jnp.int32), m,
+                            jax.tree.map(vz, params,
+                                         is_leaf=lambda x: hasattr(x, "ndim")))
+        raise ValueError(f"unknown optimizer {kind!r}")
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        gnorm = _global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, step.astype(jnp.float32)
+                           / max(warmup_steps, 1))
+        lr_t = lr * warm
+
+        if kind in ("adamw", "adamw8bit"):
+            get = _dequantize if kind == "adamw8bit" else (lambda x: x)
+            put = _quantize if kind == "adamw8bit" else (lambda x: x)
+
+            def upd(p, g, m, v):
+                mf = get(m) * b1 + g * (1 - b1)
+                vf = get(v) * b2 + g * g * (1 - b2)
+                u = (mf / bc1) / (jnp.sqrt(vf / bc2) + eps)
+                u = u + weight_decay * p.astype(jnp.float32)
+                new_p = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+                return new_p, put(mf), put(vf)
+
+            leaves_p, tdef = jax.tree_util.tree_flatten(params)
+            leaves_g = tdef.flatten_up_to(grads)
+            leaves_m = tdef.flatten_up_to(state.m)
+            leaves_v = tdef.flatten_up_to(state.v)
+            outs = [upd(p, g, m, v) for p, g, m, v in
+                    zip(leaves_p, leaves_g, leaves_m, leaves_v)]
+            new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+            new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+            new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs])
+            return new_p, OptState(step, new_m, new_v)
+
+        if kind == "adafactor":
+            def upd(p, g, m, v):
+                if p.ndim >= 2:
+                    vr, vc = v
+                    vr = vr * b2 + jnp.mean(g * g, axis=-1) * (1 - b2)
+                    vc = vc * b2 + jnp.mean(g * g, axis=-2) * (1 - b2)
+                    denom_r = vr / jnp.maximum(
+                        jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+                    vhat = denom_r[..., None] * vc[..., None, :]
+                    new_v = (vr, vc)
+                else:
+                    vhat = v * b2 + g * g * (1 - b2)
+                    new_v = vhat
+                u = g / (jnp.sqrt(vhat / bc2) + eps)
+                mf = m.astype(jnp.float32) * b1 + u * (1 - b1)
+                upd_ = mf + weight_decay * p.astype(jnp.float32)
+                new_p = (p.astype(jnp.float32) - lr_t * upd_).astype(p.dtype)
+                return new_p, mf.astype(jnp.bfloat16), new_v
+
+            leaves_p, tdef = jax.tree_util.tree_flatten(params)
+            leaves_g = tdef.flatten_up_to(grads)
+            leaves_m = tdef.flatten_up_to(state.m)
+            leaves_v = tdef.flatten_up_to(state.v)
+            outs = [upd(p, g, m, v) for p, g, m, v in
+                    zip(leaves_p, leaves_g, leaves_m, leaves_v)]
+            new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+            new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+            new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs])
+            return new_p, OptState(step, new_m, new_v)
+
+        raise ValueError(kind)
+
+    return init, update

@@ -1,0 +1,114 @@
+"""Step builders: train (loss + grad + optimizer), prefill, decode.
+
+These are what the launcher jits with the mesh shardings and what the
+dry-run lowers for every (arch x shape) cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_step, forward, mtp_logits
+from .optimizer import make_optimizer
+
+__all__ = ["loss_fn", "make_train_step", "make_prefill_step",
+           "make_decode_step"]
+
+AUX_LOSS_COEF = 0.01
+MTP_LOSS_COEF = 0.3
+
+
+def _xent(logits, labels, vocab_real: int):
+    """Cross entropy with masking of the padded vocab tail."""
+    logits = logits.astype(jnp.float32)
+    # mask padded vocab entries so they never win
+    v = logits.shape[-1]
+    if v > vocab_real:
+        neg = jnp.full((v - vocab_real,), -1e30, logits.dtype)
+        logits = logits + jnp.concatenate(
+            [jnp.zeros((vocab_real,), logits.dtype), neg])
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    return logz - gold
+
+
+def loss_fn(cfg: ModelConfig, params, batch: dict):
+    """Next-token LM loss (+ MoE aux + MTP head when configured)."""
+    tokens = batch["tokens"]
+    logits, _, aux, hidden = forward(cfg, params, batch, training=True,
+                                     return_hidden=True)
+    nll = _xent(logits[:, :-1], tokens[:, 1:], cfg.vocab_size)
+    loss = nll.mean()
+    metrics = {"nll": loss, "aux": aux}
+    total = loss + AUX_LOSS_COEF * aux
+    if cfg.mtp_heads:
+        # DeepSeek MTP: predict token t+2 from final hidden_t combined
+        # with the embedding of token t+1
+        emb_next = jnp.take(params["embed"], tokens[:, 1:], axis=0)
+        mlog = mtp_logits(cfg, params, hidden[:, :-2], emb_next[:, :-1])
+        mtp_nll = _xent(mlog, tokens[:, 2:], cfg.vocab_size).mean()
+        metrics["mtp_nll"] = mtp_nll
+        total = total + MTP_LOSS_COEF * mtp_nll
+    metrics["loss"] = total
+    return total, metrics
+
+
+def make_train_step(cfg: ModelConfig, *, lr: float = 3e-4,
+                    accum_steps: int = 1,
+                    warmup_steps: int = 0) -> tuple[Callable, Callable]:
+    """Returns (init_state_fn(params)->opt_state, step_fn).
+
+    step_fn(params, opt_state, batch) -> (params, opt_state, metrics).
+    ``accum_steps`` > 1 splits the batch into microbatches and accumulates
+    gradients with a scan (activation memory / global batch decoupling).
+    """
+    opt_init, opt_update = make_optimizer(cfg.optimizer, lr=lr,
+                                          warmup_steps=warmup_steps)
+    grad_fn = jax.grad(functools.partial(loss_fn, cfg), has_aux=True)
+
+    def step(params, opt_state, batch):
+        if accum_steps == 1:
+            grads, metrics = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                g_acc = carry
+                g, m = grad_fn(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return g_acc, m
+
+            micro_batch = jax.tree.map(
+                lambda x: x.reshape((accum_steps, -1) + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(micro, zeros, micro_batch)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        new_params, new_opt = opt_update(grads, opt_state, params)
+        return new_params, new_opt, metrics
+
+    return opt_init, step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """prefill(params, batch, cache) -> (last_logits, filled cache)."""
+    from repro.models.model import init_cache
+
+    def prefill(params, batch, cache):
+        logits, new_cache, _ = forward(cfg, params, batch, cache=cache)
+        return logits[:, -1:], new_cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    """decode(params, cache, token[B,1]) -> (logits[B,1,V], cache)."""
+
+    def decode(params, cache, token):
+        return decode_step(cfg, params, cache, token)
+
+    return decode

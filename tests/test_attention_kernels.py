@@ -1,0 +1,61 @@
+"""Flash / chunked attention vs the einsum oracle: shape x dtype x
+GQA x masking sweeps (per-kernel allclose requirement)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels.ops import attention, attention_chunked
+from repro.kernels.ref import attention_ref
+
+
+def _qkv(rng, B, Hq, Hkv, S, D, dtype=np.float32):
+    q = rng.standard_normal((B, Hq, S, D)).astype(dtype)
+    k = rng.standard_normal((B, Hkv, S, D)).astype(dtype)
+    v = rng.standard_normal((B, Hkv, S, D)).astype(dtype)
+    return q, k, v
+
+
+def _oracle(q, k, v, **kw):
+    Hq, Hkv = q.shape[1], k.shape[1]
+    if Hq != Hkv:
+        k = np.repeat(k, Hq // Hkv, axis=1)
+        v = np.repeat(v, Hq // Hkv, axis=1)
+    return np.asarray(attention_ref(jnp.asarray(q), jnp.asarray(k),
+                                    jnp.asarray(v), **kw))
+
+
+@pytest.mark.parametrize("impl", ["pallas", "chunked", "reference"])
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (1, 4, 4, 128, 64), (2, 8, 2, 128, 32), (1, 4, 1, 256, 128),
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 64)])
+def test_attention_sweep(impl, B, Hq, Hkv, S, D, causal, window, rng):
+    q, k, v = _qkv(rng, B, Hq, Hkv, S, D)
+    out = attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                    impl=impl, causal=causal, window=window)
+    ref = _oracle(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "chunked"])
+def test_attention_bf16(impl, rng):
+    q, k, v = _qkv(rng, 1, 4, 2, 128, 64)
+    qb = jnp.asarray(q, jnp.bfloat16)
+    kb = jnp.asarray(k, jnp.bfloat16)
+    vb = jnp.asarray(v, jnp.bfloat16)
+    out = attention(qb, kb, vb, impl=impl, causal=True)
+    ref = _oracle(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32), ref,
+                               rtol=0.06, atol=0.06)
+
+
+def test_chunked_block_sizes(rng):
+    q, k, v = _qkv(rng, 1, 2, 2, 256, 32)
+    ref = _oracle(q, k, v, causal=True)
+    for bq, bk in [(64, 128), (256, 64), (32, 32)]:
+        out = attention_chunked(jnp.asarray(q), jnp.asarray(k),
+                                jnp.asarray(v), causal=True,
+                                blk_q=bq, blk_k=bk)
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4,
+                                   atol=2e-5)

@@ -1,0 +1,70 @@
+"""Base kernels: elementwise vs feature-expansion equivalence, ranges,
+positive-definiteness."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.base_kernels import (CompactPolynomial, Constant,
+                                     KroneckerDelta, SquareExponential)
+
+KERNELS = [Constant(1.0), KroneckerDelta(0.5, n_labels=8),
+           SquareExponential(1.0, rank=12), CompactPolynomial(1.0)]
+
+
+@pytest.mark.parametrize("k", KERNELS, ids=lambda k: type(k).__name__)
+def test_range_and_symmetry(k, rng):
+    if isinstance(k, KroneckerDelta):
+        x = rng.integers(0, 8, 64).astype(np.float32)
+        y = rng.integers(0, 8, 64).astype(np.float32)
+    else:
+        x = rng.random(64).astype(np.float32)
+        y = rng.random(64).astype(np.float32)
+    vxy = np.asarray(k(jnp.asarray(x), jnp.asarray(y)))
+    vyx = np.asarray(k(jnp.asarray(y), jnp.asarray(x)))
+    assert np.allclose(vxy, vyx, atol=1e-7)
+    assert (vxy >= 0).all() and (vxy <= 1 + 1e-6).all()
+    # kappa(x, x) == 1 for these kernels
+    vxx = np.asarray(k(jnp.asarray(x), jnp.asarray(x)))
+    assert np.allclose(vxx, 1.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("k", [Constant(0.7), KroneckerDelta(0.3, 8),
+                               SquareExponential(2.0, rank=16)],
+                         ids=lambda k: type(k).__name__)
+def test_feature_expansion_matches_elementwise(k, rng):
+    if isinstance(k, KroneckerDelta):
+        x = rng.integers(0, 8, 32).astype(np.float32)
+        y = rng.integers(0, 8, 32).astype(np.float32)
+    else:
+        x = rng.random(32).astype(np.float32)
+        y = rng.random(32).astype(np.float32)
+    direct = np.asarray(k(jnp.asarray(x)[:, None], jnp.asarray(y)[None, :]))
+    phi_x = np.asarray(k.features(jnp.asarray(x)))
+    phi_y = np.asarray(k.features(jnp.asarray(y)))
+    via_features = phi_x @ phi_y.T
+    assert np.allclose(direct, via_features, atol=2e-6), \
+        np.abs(direct - via_features).max()
+
+
+@settings(max_examples=30, deadline=None)
+@given(alpha=st.floats(0.1, 4.0), x=st.floats(0, 1), y=st.floats(0, 1))
+def test_se_truncation_error_bound(alpha, x, y):
+    k = SquareExponential(alpha, rank=12)
+    direct = float(k(jnp.float32(x), jnp.float32(y)))
+    fx = np.asarray(k.features(jnp.float32(x)))
+    fy = np.asarray(k.features(jnp.float32(y)))
+    assert abs(direct - float(fx @ fy)) < 1e-4
+
+
+@pytest.mark.parametrize("k", [KroneckerDelta(0.5, 8),
+                               SquareExponential(1.0, rank=12)],
+                         ids=lambda k: type(k).__name__)
+def test_kernel_matrix_psd(k, rng):
+    if isinstance(k, KroneckerDelta):
+        x = rng.integers(0, 8, 40).astype(np.float32)
+    else:
+        x = rng.random(40).astype(np.float32)
+    K = np.asarray(k(jnp.asarray(x)[:, None], jnp.asarray(x)[None, :]))
+    w = np.linalg.eigvalsh(K.astype(np.float64))
+    assert w.min() > -1e-5

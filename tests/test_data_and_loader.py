@@ -1,0 +1,77 @@
+"""Data pipeline: generators + bucketing loader."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import Graph, batch_from_graphs
+from repro.data import (bucket_graphs, make_drugbank_like_dataset,
+                        make_pdb_like_dataset, make_synthetic_dataset)
+
+
+def test_nws_structure(rng):
+    gs = make_synthetic_dataset("nws", n_graphs=4, n_nodes=96, seed=0)
+    for g in gs:
+        a = g.adjacency
+        assert np.allclose(a, a.T)
+        assert np.all(np.diag(a) == 0)
+        deg = (a != 0).sum(1)
+        assert deg.mean() >= 5.5          # ring degree 6 + shortcuts
+
+
+def test_ba_scale_free_hubs(rng):
+    gs = make_synthetic_dataset("ba", n_graphs=4, n_nodes=96, seed=0)
+    for g in gs:
+        deg = (g.adjacency != 0).sum(1)
+        assert deg.max() > 3 * np.median(deg)   # hubs exist
+
+
+def test_pdb_like_spatial_locality():
+    gs, coords = make_pdb_like_dataset(n_graphs=3, seed=1)
+    for g, c in zip(gs, coords):
+        i, j = np.nonzero(g.adjacency)
+        d = np.linalg.norm(c[i] - c[j], axis=1)
+        assert d.max() < 1.8 + 1e-5       # edges respect the cutoff
+        assert np.allclose(g.edge_labels, g.edge_labels.T)
+
+
+def test_drugbank_like_size_tail():
+    gs = make_drugbank_like_dataset(n_graphs=200, seed=0)
+    sizes = np.array([g.n_nodes for g in gs])
+    assert sizes.min() >= 2
+    assert sizes.max() > 100              # long tail (paper: 1..551)
+    assert np.median(sizes) < 60
+
+
+def test_padding_is_inert(rng):
+    gs = make_synthetic_dataset("nws", n_graphs=2, n_nodes=10, seed=0)
+    b16 = batch_from_graphs(gs, pad_to=16)
+    b32 = batch_from_graphs(gs, pad_to=32)
+    from repro.core import KroneckerDelta, SquareExponential, mgk_pairs
+    r16 = mgk_pairs(b16, b16, KroneckerDelta(0.5), SquareExponential(1.0),
+                    tol=1e-12)
+    r32 = mgk_pairs(b32, b32, KroneckerDelta(0.5), SquareExponential(1.0),
+                    tol=1e-12)
+    np.testing.assert_allclose(np.asarray(r16.values),
+                               np.asarray(r32.values), rtol=1e-4)
+
+
+def test_buckets_partition_dataset():
+    gs = make_drugbank_like_dataset(n_graphs=60, seed=2)
+    ds = bucket_graphs(gs, max_buckets=5)
+    all_idx = sorted(i for b in ds.buckets for i in b.indices)
+    assert all_idx == list(range(60))
+    for b in ds.buckets:
+        for i in b.indices:
+            assert gs[i].n_nodes <= b.pad_to
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_graph_create_rejects_asymmetric(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.random((5, 5)).astype(np.float32)
+    a[0, 1], a[1, 0] = 1.0, 0.5
+    try:
+        Graph.create(a)
+        assert False, "should have raised"
+    except ValueError:
+        pass

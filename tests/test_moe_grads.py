@@ -1,0 +1,56 @@
+"""MoE gather-only custom VJPs vs a dense all-experts reference.
+
+The production layer never materializes scatters (forward or backward);
+this test proves the hand-written transposes are exact."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.moe import moe_init, moe_layer
+
+CFG = MoEConfig(n_experts=4, top_k=2, d_expert=16, n_shared=0,
+                capacity_factor=2.0)   # dropless
+D = 32
+
+
+def _ref_layer(p, x):
+    logits = jnp.einsum("bsd,de->bse", x, p.router)
+    probs = jax.nn.softmax(logits, -1)
+    gv, gi = jax.lax.top_k(probs, CFG.top_k)
+    gv = gv / gv.sum(-1, keepdims=True)
+    gate_full = jnp.zeros_like(probs)
+    for slot in range(CFG.top_k):
+        gate_full = gate_full + jax.nn.one_hot(
+            gi[..., slot], CFG.n_experts) * gv[..., slot:slot + 1]
+    g = jnp.einsum("bsd,edf->bsef", x, p.w_gate)
+    u = jnp.einsum("bsd,edf->bsef", x, p.w_up)
+    h = jax.nn.silu(g) * u
+    eo = jnp.einsum("bsef,efd->bsed", h, p.w_down)
+    return jnp.einsum("bsed,bse->bsd", eo, gate_full)
+
+
+def test_forward_matches_dense_reference(rng):
+    p = moe_init(jax.random.key(0), D, CFG, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 8, D)), jnp.float32)
+    out, _ = moe_layer(p, x, CFG)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(_ref_layer(p, x)),
+                               atol=1e-5)
+
+
+def test_custom_vjp_gradients_exact(rng):
+    p = moe_init(jax.random.key(0), D, CFG, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 8, D)), jnp.float32)
+
+    loss_ours = lambda p, x: jnp.sum(moe_layer(p, x, CFG)[0] ** 2)  # noqa
+    loss_ref = lambda p, x: jnp.sum(_ref_layer(p, x) ** 2)          # noqa
+    gx = jax.grad(loss_ours, argnums=1)(p, x)
+    gx_ref = jax.grad(loss_ref, argnums=1)(p, x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref),
+                               atol=1e-4)
+    gp = jax.grad(loss_ours)(p, x)
+    gp_ref = jax.grad(loss_ref)(p, x)
+    for f in ("w_gate", "w_up", "w_down", "router"):
+        a, b = np.asarray(getattr(gp, f)), np.asarray(getattr(gp_ref, f))
+        scale = np.abs(b).max() + 1e-9
+        assert np.abs(a - b).max() / scale < 1e-4, f

@@ -1,0 +1,59 @@
+"""Octile decomposition: roundtrip, bitmap correctness, counting."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.octile import (count_nonempty_tiles, expand_octiles,
+                               octile_decompose, tile_occupancy_histogram)
+
+
+def _sparse(rng, n, density):
+    a = (rng.random((n, n)) < density).astype(np.float32)
+    a = np.triu(a, 1)
+    a = a + a.T
+    e = rng.random((n, n)).astype(np.float32) * (a != 0)
+    return a, e
+
+
+def test_roundtrip(rng):
+    a, e = _sparse(rng, 37, 0.1)   # non-multiple-of-8 size
+    oset = octile_decompose(a, e)
+    a2, e2 = expand_octiles(oset)
+    assert np.allclose(a2[:37, :37], a)
+    assert np.allclose(e2[:37, :37], e)
+
+
+def test_bitmap_popcount_equals_nnz(rng):
+    a, e = _sparse(rng, 64, 0.07)
+    oset = octile_decompose(a, e)
+    pop = sum(bin(int(b)).count("1") for b in oset.bitmaps)
+    assert pop == oset.nnz == np.count_nonzero(a)
+
+
+def test_count_matches_decompose(rng):
+    a, _ = _sparse(rng, 48, 0.05)
+    assert count_nonempty_tiles(a) == octile_decompose(a).n_nonempty
+
+
+def test_coords_sorted_row_major(rng):
+    a, _ = _sparse(rng, 80, 0.04)
+    oset = octile_decompose(a)
+    c = oset.coords
+    keys = c[:, 0] * oset.n_tiles_side + c[:, 1]
+    assert (np.diff(keys) > 0).all()     # strictly increasing => no dups
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 60), density=st.floats(0.0, 0.3),
+       seed=st.integers(0, 1000))
+def test_roundtrip_property(n, density, seed):
+    rng = np.random.default_rng(seed)
+    a, e = _sparse(rng, n, density)
+    oset = octile_decompose(a, e)
+    a2, _ = expand_octiles(oset)
+    assert np.allclose(a2[:n, :n], a)
+
+
+def test_histogram_total(rng):
+    a, _ = _sparse(rng, 64, 0.1)
+    hist = tile_occupancy_histogram(a)
+    assert hist.sum() == count_nonempty_tiles(a)

@@ -1,0 +1,65 @@
+"""Optimizers: convergence on a quadratic, 8-bit ~= fp32, adafactor
+state shapes, clipping."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train.optimizer import make_optimizer
+
+
+def _quadratic_params(rng):
+    return {"w": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((8,)), jnp.float32)}
+
+
+def _loss(params):
+    return jnp.sum(params["w"] ** 2) + jnp.sum((params["b"] - 1.0) ** 2)
+
+
+@pytest.mark.parametrize("kind", ["adamw", "adamw8bit", "adafactor"])
+def test_optimizer_decreases_loss(kind, rng):
+    init, update = make_optimizer(kind, lr=5e-2, weight_decay=0.0)
+    params = _quadratic_params(rng)
+    state = init(params)
+    l0 = float(_loss(params))
+    for _ in range(60):
+        grads = jax.grad(_loss)(params)
+        params, state = update(grads, state, params)
+    assert float(_loss(params)) < 0.05 * l0
+
+
+def test_8bit_tracks_fp32(rng):
+    params = _quadratic_params(rng)
+    i32, u32 = make_optimizer("adamw", lr=1e-2, weight_decay=0.0)
+    i8, u8 = make_optimizer("adamw8bit", lr=1e-2, weight_decay=0.0)
+    p32, s32 = params, i32(params)
+    p8, s8 = params, i8(params)
+    for _ in range(25):
+        g32 = jax.grad(_loss)(p32)
+        p32, s32 = u32(g32, s32, p32)
+        g8 = jax.grad(_loss)(p8)
+        p8, s8 = u8(g8, s8, p8)
+    # trajectories stay close (the compression is nearly lossless here)
+    diff = float(jnp.max(jnp.abs(p32["w"] - p8["w"])))
+    scale = float(jnp.max(jnp.abs(p32["w"]))) + 1e-6
+    assert diff / scale < 0.15
+
+
+def test_adafactor_state_is_factored(rng):
+    params = _quadratic_params(rng)
+    init, _ = make_optimizer("adafactor")
+    state = init(params)
+    vr, vc = state.v["w"]
+    assert vr.shape == (8,) and vc.shape == (8,)
+    assert state.m["w"].dtype == jnp.bfloat16   # compressed first moment
+
+
+def test_clipping_bounds_update(rng):
+    init, update = make_optimizer("adamw", lr=1.0, clip_norm=1e-3,
+                                  weight_decay=0.0)
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    state = init(params)
+    huge = {"w": jnp.full((4,), 1e9, jnp.float32)}
+    new_params, _ = update(huge, state, params)
+    assert float(jnp.max(jnp.abs(new_params["w"]))) < 20.0

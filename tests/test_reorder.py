@@ -1,0 +1,70 @@
+"""Reordering: validity, tile-count reduction (paper Fig. 7), and the
+solver's invariance to reordering."""
+import numpy as np
+import pytest
+
+from repro.core.octile import count_nonempty_tiles
+from repro.core.reorder import best_order, morton_order, pbr_order, \
+    rcm_order
+from repro.data.molecules import pdb_like_graph
+from repro.data.synthetic import newman_watts_strogatz
+
+
+def _banded(rng, n, bw):
+    a = np.zeros((n, n), np.float32)
+    for i in range(n):
+        for j in range(max(0, i - bw), min(n, i + bw + 1)):
+            if i != j and rng.random() < 0.6:
+                a[i, j] = a[j, i] = 1.0
+    return a
+
+
+@pytest.mark.parametrize("method", [rcm_order, pbr_order])
+def test_returns_permutation(method, rng):
+    g = newman_watts_strogatz(50, rng=rng, labeled=False)
+    p = method(g.adjacency)
+    assert sorted(p.tolist()) == list(range(50))
+
+
+def test_morton_is_permutation(rng):
+    coords = rng.random((64, 3))
+    p = morton_order(coords)
+    assert sorted(p.tolist()) == list(range(64))
+
+
+def test_rcm_reduces_bandwidth_of_shuffled_band(rng):
+    a = _banded(rng, 96, 3)
+    perm = rng.permutation(96)
+    shuffled = a[np.ix_(perm, perm)]
+    p = rcm_order(shuffled)
+    re = shuffled[np.ix_(p, p)]
+    def bandwidth(m):
+        i, j = np.nonzero(m)
+        return np.abs(i - j).max() if len(i) else 0
+    assert bandwidth(re) < bandwidth(shuffled)
+
+
+def test_pbr_reduces_tiles_on_shuffled_protein(rng):
+    g, _ = pdb_like_graph(120, rng=rng)
+    perm = rng.permutation(120)
+    shuffled = g.adjacency[np.ix_(perm, perm)]
+    base = count_nonempty_tiles(shuffled)
+    p = pbr_order(shuffled)
+    after = count_nonempty_tiles(shuffled[np.ix_(p, p)])
+    # paper Fig. 7: PBR beats a destroyed natural order decisively
+    assert after < base
+
+
+def test_morton_reduces_tiles_for_spatial_graph(rng):
+    g, coords = pdb_like_graph(150, rng=rng)
+    perm = rng.permutation(150)
+    shuffled = g.adjacency[np.ix_(perm, perm)]
+    p = morton_order(coords[perm])
+    after = count_nonempty_tiles(shuffled[np.ix_(p, p)])
+    assert after < count_nonempty_tiles(shuffled)
+
+
+def test_best_order_never_worse_than_natural(rng):
+    g, coords = pdb_like_graph(100, rng=rng)
+    _, name, score = best_order(g.adjacency, coords=coords)
+    assert score <= count_nonempty_tiles(g.adjacency)

@@ -1,0 +1,74 @@
+"""End-to-end behaviour tests for the paper's system: the complete
+pipeline from raw graphs to a normalized Gram matrix, exercising
+reordering, bucketing, scheduling, sharded pair-solves and
+checkpointing in one pass — plus the multi-pod dry-run as a subprocess
+(the container's single CPU only carries 512 placeholder devices in a
+dedicated process)."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+from jax.sharding import Mesh
+
+from repro.core import (KroneckerDelta, SquareExponential, best_order,
+                        batch_from_graphs, mgk_pairs)
+from repro.data import bucket_graphs, make_drugbank_like_dataset
+from repro.distributed import ChunkStore, GramDriver
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_full_pipeline_drugbank_like(tmp_path):
+    graphs = [g for g in make_drugbank_like_dataset(16, seed=11)
+              if g.n_nodes >= 4][:12]
+    # production preprocessing: reorder each graph for tile density
+    reordered = []
+    for g in graphs:
+        p, _, _ = best_order(g.adjacency)
+        reordered.append(g.permuted(p))
+    ds = bucket_graphs(reordered, max_buckets=3)
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+    drv = GramDriver(ds, mesh, KroneckerDelta(0.5, 8),
+                     SquareExponential(1.0, rank=10),
+                     store=ChunkStore(str(tmp_path)), pairs_per_block=16)
+    K = drv.run()
+    assert K.shape == (12, 12)
+    assert not np.isnan(K).any()
+    assert np.allclose(np.diag(K), 1.0, atol=1e-5)
+    assert np.linalg.eigvalsh(K).min() > -1e-6
+    # reordering must not change values: compare one pair against the
+    # un-reordered graphs directly
+    vk, ek = KroneckerDelta(0.5, 8), SquareExponential(1.0, rank=10)
+    a = batch_from_graphs([graphs[0]], pad_to=None)
+    b = batch_from_graphs([graphs[1]], pad_to=None)
+    raw = mgk_pairs(a, b, vk, ek, tol=1e-10)
+    d0 = mgk_pairs(a, a, vk, ek, tol=1e-10)
+    d1 = mgk_pairs(b, b, vk, ek, tol=1e-10)
+    expected = float(raw.values[0]) / np.sqrt(
+        float(d0.values[0]) * float(d1.values[0]))
+    np.testing.assert_allclose(K[0, 1], expected, rtol=1e-3)
+
+
+@pytest.mark.slow
+def test_multipod_dryrun_subprocess(tmp_path):
+    """Lower+compile the paper's gram step on the 2x16x16 multi-pod mesh
+    (512 placeholder devices) in a subprocess — the minimal live check of
+    the multi-pod deliverable."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mgk-gram",
+         "--shape", "gram_block", "--mesh", "multi", "--out",
+         str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=540,
+        cwd=str(tmp_path))
+    assert out.returncode == 0, out.stdout + out.stderr
+    rec = json.load(open(os.path.join(
+        tmp_path, "mgk-gram__gram_block__multi__baseline.json")))
+    assert rec["status"] == "ok"
+    assert rec["n_devices"] == 512
+    assert rec["mesh_shape"] == {"pod": 2, "data": 16, "model": 16}

@@ -1,22 +1,39 @@
 """Benchmark driver — one module per paper table/figure. Prints
 ``name,us_per_call,derived`` CSV (plus a roofline section read from the
-dry-run records if present).
+dry-run records if present) and writes ``BENCH_xmv.json`` (the PR-1
+hot-path before/after numbers).
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run [--smoke]
+
+``--smoke`` runs a CI-sized subset: the XMV hot-path comparison at small
+sizes plus the primitive sweep at one size. Everything else is the full
+(slow) paper-figure sweep.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick CI subset (small sizes)")
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
+    from . import xmv_bench
+    if args.smoke:
+        from . import primitives
+        primitives.run(sizes=(32,))
+        xmv_bench.run(sizes=(2, 8), pad_to=16, iters=3)
+        return
     from . import primitives, reorder_bench, adaptive, incremental, \
         packages, roofline
     primitives.run()          # paper Fig. 5 / Table I
+    xmv_bench.run()           # PR 1: batched-grid + fused + pipelined CG
     reorder_bench.run()       # paper Figs. 6-7
     adaptive.run()            # paper Fig. 8
     incremental.run()         # paper Fig. 9

@@ -91,13 +91,16 @@ def _make_matvec(g1: GraphBatch, g2: GraphBatch, sys_: ProductSystem,
     if method == "pallas":
         # imported lazily: kernels package depends on core
         from repro.kernels import ops as kops
+        diag_nm = diag.reshape(B, n, m)
 
         def matvec(p_vec):
+            # fused epilogue: the kernel itself emits diag*p - y, so one
+            # launch IS the whole operator application (DESIGN.md §3)
             P = p_vec.reshape(B, n, m)
-            y = kops.xmv_dense_batched(g1.adjacency, g1.edge_labels,
-                                       g2.adjacency, g2.edge_labels, P,
-                                       edge_kernel)
-            return diag * p_vec - y.reshape(B, -1)
+            out = kops.xmv_dense_batched(g1.adjacency, g1.edge_labels,
+                                         g2.adjacency, g2.edge_labels, P,
+                                         edge_kernel, diag=diag_nm)
+            return out.reshape(B, -1)
         return matvec
 
     if method == "full":
@@ -119,7 +122,8 @@ def _make_matvec(g1: GraphBatch, g2: GraphBatch, sys_: ProductSystem,
 @functools.partial(
     jax.jit,
     static_argnames=("vertex_kernel", "edge_kernel", "method", "chunk",
-                     "max_iter", "return_nodal", "fixed_iters"))
+                     "max_iter", "return_nodal", "fixed_iters",
+                     "pcg_variant"))
 def mgk_pairs(
     g1: GraphBatch,
     g2: GraphBatch,
@@ -132,6 +136,7 @@ def mgk_pairs(
     max_iter: int = 512,
     return_nodal: bool = False,
     fixed_iters: int | None = None,
+    pcg_variant: str = "classic",
 ) -> MGKResult:
     """Marginalized graph kernel between aligned pairs of two batches."""
     sys_ = build_product_system(g1, g2, vertex_kernel)
@@ -139,7 +144,8 @@ def mgk_pairs(
     rhs = sys_.dx * sys_.qx
     precond = sys_.dx / sys_.vx      # paper Alg. 1 line 2
     sol: PCGResult = pcg_solve(matvec, rhs, precond, tol=tol,
-                               max_iter=max_iter, fixed_iters=fixed_iters)
+                               max_iter=max_iter, fixed_iters=fixed_iters,
+                               variant=pcg_variant)
     values = jnp.sum(sys_.px * sol.x, axis=-1)
     nodal = None
     if return_nodal:
@@ -171,7 +177,9 @@ def mgk_adaptive(g1: GraphBatch, g2: GraphBatch,
                  vertex_kernel: BaseKernel = Constant(1.0),
                  edge_kernel: BaseKernel = Constant(1.0),
                  *, density_threshold: float = 0.15,
-                 tol: float = 1e-10, max_iter: int = 512) -> MGKResult:
+                 tol: float = 1e-10, max_iter: int = 512,
+                 fixed_iters: int | None = None,
+                 pcg_variant: str = "classic") -> MGKResult:
     """The paper's adaptive primitive switch (Sec. IV-B), lifted to the
     bucket level: pick the XMV backend per pair-batch from the octile
     density statistic.
@@ -196,20 +204,24 @@ def mgk_adaptive(g1: GraphBatch, g2: GraphBatch,
             rank = None
     if rank is not None and rank <= max(16, dens * n):
         return mgk_pairs(g1, g2, vertex_kernel, edge_kernel,
-                         method="lowrank", tol=tol, max_iter=max_iter)
+                         method="lowrank", tol=tol, max_iter=max_iter,
+                         fixed_iters=fixed_iters, pcg_variant=pcg_variant)
     if dens < density_threshold:
         from repro.kernels.ops import packs_for_batch
         return mgk_pairs_sparse(g1, g2, packs_for_batch(g1),
                                 packs_for_batch(g2), vertex_kernel,
-                                edge_kernel, tol=tol, max_iter=max_iter)
+                                edge_kernel, tol=tol, max_iter=max_iter,
+                                fixed_iters=fixed_iters,
+                                pcg_variant=pcg_variant)
     return mgk_pairs(g1, g2, vertex_kernel, edge_kernel, method="pallas",
-                     tol=tol, max_iter=max_iter)
+                     tol=tol, max_iter=max_iter, fixed_iters=fixed_iters,
+                     pcg_variant=pcg_variant)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("vertex_kernel", "edge_kernel", "max_iter",
-                     "return_nodal"))
+                     "return_nodal", "fixed_iters", "pcg_variant"))
 def mgk_pairs_sparse(
     g1: GraphBatch,
     g2: GraphBatch,
@@ -221,26 +233,35 @@ def mgk_pairs_sparse(
     tol: float = 1e-10,
     max_iter: int = 512,
     return_nodal: bool = False,
+    fixed_iters: int | None = None,
+    pcg_variant: str = "classic",
 ) -> MGKResult:
     """Block-sparse-octile variant of mgk_pairs (paper Sec. IV).
 
     The TilePacks are host-preprocessed (pack_octiles after reordering) —
     the quadratic CG work then touches only non-empty octiles. GraphBatch
-    still supplies the diagonal/probability vectors (cheap, O(n+m))."""
+    still supplies the diagonal/probability vectors (cheap, O(n+m)).
+
+    The whole bucket's matvec is ONE batched-grid ``pallas_call`` with the
+    diagonal epilogue fused in-kernel (DESIGN.md §3); shares mgk_pairs'
+    ``fixed_iters``/``pcg_variant`` contract."""
     from repro.kernels.ops import xmv_block_sparse_batched
 
     sys_ = build_product_system(g1, g2, vertex_kernel)
     B, n = g1.adjacency.shape[0], g1.adjacency.shape[1]
     m = g2.adjacency.shape[1]
     diag = sys_.dx / sys_.vx
+    diag_nm = diag.reshape(B, n, m)
 
     def matvec(p_vec):
         P = p_vec.reshape(B, n, m)
-        y = xmv_block_sparse_batched(packs1, packs2, P, edge_kernel)
-        return diag * p_vec - y.reshape(B, -1)
+        out = xmv_block_sparse_batched(packs1, packs2, P, edge_kernel,
+                                       diag=diag_nm)
+        return out.reshape(B, -1)
 
     rhs = sys_.dx * sys_.qx
-    sol = pcg_solve(matvec, rhs, diag, tol=tol, max_iter=max_iter)
+    sol = pcg_solve(matvec, rhs, diag, tol=tol, max_iter=max_iter,
+                    fixed_iters=fixed_iters, variant=pcg_variant)
     values = jnp.sum(sys_.px * sol.x, axis=-1)
     nodal = sol.x.reshape(B, n, m) if return_nodal else None
     return MGKResult(values=values, iterations=sol.iterations,

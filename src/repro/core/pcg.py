@@ -7,6 +7,25 @@ batch runs until ALL members converge (or max_iter). This is exactly the
 behavior the paper's load-balancing section reasons about — iteration-count
 variance across pairs — which our scheduler handles by bucketing pairs of
 similar size (distributed/scheduler.py).
+
+Two recurrences (``variant=``, DESIGN.md §3):
+
+* ``"classic"`` — textbook PCG. Each iteration has TWO dependent
+  reduction rounds: (p, Ap) must finish before x/r update, and (r, z)
+  must finish before the next direction p. When the product rows are
+  sharded over the "model" mesh axis (distributed/gram.py) each round is
+  a cross-device all-reduce, so latency enters the critical path twice
+  per iteration.
+* ``"pipelined"`` — single-reduction pipelined PCG in the
+  Chronopoulos–Gear form used by the pipelined-CG literature (Ghysels &
+  Vanroose; Tiwari & Vadhiyar, PAPERS.md): s = A p is obtained by
+  recurrence (computed once, not re-derived from p), and ALL inner
+  products of an iteration — gamma = (r, u), delta = (w, u), and the
+  convergence check (r, r) — are issued together as ONE fused reduction
+  round. Same solution trajectory in exact arithmetic; one reduction
+  latency per iteration instead of two. Unlike the fully-recurred
+  Ghysels–Vanroose variant, u = M^{-1} r and w = A u stay freshly
+  computed, so f32 attainable accuracy matches classic PCG.
 """
 from __future__ import annotations
 
@@ -25,6 +44,20 @@ class PCGResult(NamedTuple):
     converged: jnp.ndarray   # [B] bool
 
 
+def _run(cond, body, init, fixed_iters):
+    if fixed_iters is not None:
+        def scan_body(s, _):
+            return body(s), None
+        final, _ = jax.lax.scan(scan_body, init, None, length=fixed_iters)
+        return final
+    return jax.lax.while_loop(cond, body, init)
+
+
+def _guard(x):
+    """Divide-safe denominator (0 -> 1; the numerator is 0 there too)."""
+    return jnp.where(x == 0, jnp.asarray(1.0, x.dtype), x)
+
+
 def pcg_solve(
     matvec: Callable[[jnp.ndarray], jnp.ndarray],
     b: jnp.ndarray,
@@ -33,6 +66,7 @@ def pcg_solve(
     tol: float = 1e-10,
     max_iter: int = 256,
     fixed_iters: int | None = None,
+    variant: str = "classic",
 ) -> PCGResult:
     """Solve ``A x = b`` for a batch of SPD systems.
 
@@ -52,7 +86,21 @@ def pcg_solve(
         load-balancing premise) and it makes the CG body visible to the
         static roofline profile (analysis/hlo_cost.py multiplies scan
         bodies by their trip count; a dynamic while reports trip=1).
+      variant: "classic" (two dependent reduction rounds per iteration) or
+        "pipelined" (Ghysels–Vanroose: one fused reduction round that
+        overlaps the matvec — see module docstring). Identical iterates in
+        exact arithmetic.
     """
+    if variant == "classic":
+        return _pcg_classic(matvec, b, diag_precond, tol=tol,
+                            max_iter=max_iter, fixed_iters=fixed_iters)
+    if variant == "pipelined":
+        return _pcg_pipelined(matvec, b, diag_precond, tol=tol,
+                              max_iter=max_iter, fixed_iters=fixed_iters)
+    raise ValueError(f"unknown PCG variant {variant!r}")
+
+
+def _pcg_classic(matvec, b, diag_precond, *, tol, max_iter, fixed_iters):
     eps = jnp.asarray(1e-30, b.dtype)
     b_norm2 = jnp.maximum(jnp.sum(b * b, axis=-1), eps)   # [B]
     thresh = (tol * tol) * b_norm2
@@ -77,13 +125,12 @@ def pcg_solve(
         active = ~conv
         a = matvec(p)                                       # [B, N]
         pa = jnp.sum(p * a, axis=-1)
-        alpha = jnp.where(active, rho / jnp.where(pa == 0, 1.0, pa), 0.0)
+        alpha = jnp.where(active, rho / _guard(pa), 0.0)
         x = x + alpha[:, None] * p
         r = r - alpha[:, None] * a
         z = r / diag_precond
         rho_new = jnp.sum(r * z, axis=-1)
-        beta = jnp.where(active, rho_new / jnp.where(rho == 0, 1.0, rho),
-                         0.0)
+        beta = jnp.where(active, rho_new / _guard(rho), 0.0)
         p = jnp.where(active[:, None], z + beta[:, None] * p, p)
         res_new = jnp.where(active, jnp.sum(r * r, axis=-1), res)
         conv = jnp.logical_or(conv, res_new <= thresh)
@@ -92,12 +139,79 @@ def pcg_solve(
         return (x, r, p, rho, conv, res_new, it + 1, iters)
 
     init = (x0, r0, p0, rho0, conv0, res0, jnp.int32(0), iters0)
-    if fixed_iters is not None:
-        def scan_body(s, _):
-            return body(s), None
-        final, _ = jax.lax.scan(scan_body, init, None, length=fixed_iters)
-        x, _, _, _, conv, res, _, iters = final
-    else:
-        x, _, _, _, conv, res, _, iters = jax.lax.while_loop(cond, body,
-                                                             init)
+    x, _, _, _, conv, res, _, iters = _run(cond, body, init, fixed_iters)
+    return PCGResult(x=x, iterations=iters, residual=res, converged=conv)
+
+
+def _pcg_pipelined(matvec, b, diag_precond, *, tol, max_iter, fixed_iters):
+    """Single-reduction (Chronopoulos–Gear) pipelined PCG.
+
+    Per iteration — ONE matvec, ONE fused reduction round:
+
+        p <- u + beta p;   s <- w + beta s        # s = A p by recurrence
+        x <- x + alpha p;  r <- r - alpha s
+        u = M^{-1} r;      w = A u                # the iteration's matvec
+        gamma' = (r, u);  delta = (w, u);  res = (r, r)   # fused round
+        beta'  = gamma' / gamma
+        alpha' = gamma' / (delta - beta' * gamma' / alpha)
+
+    alpha is derived from the SAME reduction round as gamma (the classic
+    recurrence would need (p, A p), a second, dependent round). The
+    convergence check reads the post-update residual exactly like the
+    classic body, so iteration counts match classic to the floating-point
+    drift of the s-recurrence (±1 in practice).
+    """
+    eps = jnp.asarray(1e-30, b.dtype)
+    b_norm2 = jnp.maximum(jnp.sum(b * b, axis=-1), eps)   # [B]
+    thresh = (tol * tol) * b_norm2
+
+    x0 = jnp.zeros_like(b)
+    r0 = b
+    u0 = r0 / diag_precond
+    w0 = matvec(u0)
+    gamma0 = jnp.sum(r0 * u0, axis=-1)
+    delta0 = jnp.sum(w0 * u0, axis=-1)
+    res0 = jnp.sum(r0 * r0, axis=-1)
+    conv0 = res0 <= thresh
+    alpha0 = jnp.where(conv0, 0.0, gamma0 / _guard(delta0))
+    beta0 = jnp.zeros_like(gamma0)
+    zeros = jnp.zeros_like(b)
+    iters0 = jnp.zeros(b.shape[0], jnp.int32)
+
+    # (x, r, u, w, p, s, gamma, alpha, beta, conv, res, it, iters)
+    def cond(st):
+        conv, it = st[9], st[11]
+        return jnp.logical_and(it < max_iter, ~jnp.all(conv))
+
+    def body(st):
+        x, r, u, w, p, s, gamma, alpha, beta, conv, res, it, iters = st
+        active = ~conv
+        am = active[:, None]
+        # -- vector updates from the PREVIOUS round's scalars -----------
+        p = jnp.where(am, u + beta[:, None] * p, p)
+        s = jnp.where(am, w + beta[:, None] * s, s)   # s = A p, recurred
+        x = x + alpha[:, None] * p
+        r = r - alpha[:, None] * s
+        u = jnp.where(am, r / diag_precond, u)
+        w = jnp.where(am, matvec(u), w)               # single matvec
+        # -- the single fused reduction round ---------------------------
+        gamma_new = jnp.sum(r * u, axis=-1)
+        delta = jnp.sum(w * u, axis=-1)
+        res_new = jnp.where(active, jnp.sum(r * r, axis=-1), res)
+        conv = jnp.logical_or(conv, res_new <= thresh)
+        iters = iters + active.astype(jnp.int32)
+        still = ~conv
+        beta = jnp.where(still, gamma_new / _guard(gamma), 0.0)
+        alpha = jnp.where(
+            still,
+            gamma_new / _guard(delta - beta * gamma_new / _guard(alpha)),
+            0.0)
+        gamma = jnp.where(still, gamma_new, gamma)
+        return (x, r, u, w, p, s, gamma, alpha, beta, conv, res_new,
+                it + 1, iters)
+
+    init = (x0, r0, u0, w0, zeros, zeros, gamma0, alpha0, beta0, conv0,
+            res0, jnp.int32(0), iters0)
+    final = _run(cond, body, init, fixed_iters)
+    x, conv, res, iters = final[0], final[9], final[10], final[12]
     return PCGResult(x=x, iterations=iters, residual=res, converged=conv)

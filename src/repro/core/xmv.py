@@ -49,10 +49,14 @@ def xmv_elementwise(A, E, Ap, Ep, P, edge_kernel: BaseKernel,
                     chunk: int = 8):
     """Paper-faithful streaming XMV: scan over length-``chunk`` column
     blocks of (A, E), regenerating kappa products on the fly. Peak temp
-    memory O(chunk * n * m^2) instead of O(n^2 m^2)."""
+    memory O(chunk * n * m^2) instead of O(n^2 m^2).
+
+    ``chunk`` is a memory/throughput knob, not a correctness contract:
+    when it does not divide ``n`` it is clamped to the largest divisor of
+    ``n`` that fits, so arbitrary bucket sizes work."""
     n, m = A.shape[0], Ap.shape[0]
     if n % chunk:
-        raise ValueError(f"n={n} must be a multiple of chunk={chunk}")
+        chunk = max(c for c in range(1, min(chunk, n) + 1) if n % c == 0)
 
     def body(carry, j0):
         y = carry

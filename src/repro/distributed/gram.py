@@ -27,7 +27,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.base_kernels import BaseKernel, Constant
 from repro.core.graph import GraphBatch
-from repro.core.mgk import MGKResult, mgk_pairs
+from repro.core.mgk import MGKResult, mgk_pairs, mgk_pairs_sparse
 from repro.data.loader import BucketedDataset, PairBlock, pair_blocks
 from .checkpoint import ChunkStore
 from .scheduler import SchedulePlan, make_plan, replan
@@ -77,13 +77,41 @@ def pair_shardings(mesh: Mesh) -> tuple:
 
 def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
                    edge_kernel: BaseKernel, *, method: str = "lowrank",
-                   tol: float = 1e-8, max_iter: int = 256) -> Callable:
-    """Build the jitted sharded pair-solve step for a mesh."""
+                   tol: float = 1e-8, max_iter: int = 256,
+                   fixed_iters: int | None = None,
+                   pcg_variant: str = "classic") -> Callable:
+    """Build the pair-solve step for a mesh.
+
+    ``pcg_variant="pipelined"`` halves the per-iteration all-reduce rounds
+    when the product rows are sharded over "model" (DESIGN.md §3/§4);
+    ``fixed_iters`` makes every pair of a bucket run the same trip count
+    (the paper's load-balancing premise, and a known-size scan for the
+    static roofline).
+
+    ``method="pallas_sparse"`` returns a host-driven step: the octile
+    TilePacks are built on the host per block (they are per-graph index
+    structures, not shardable tensors), then the whole bucket solves in
+    one batched-grid kernel launch per CG matvec."""
+    if method == "pallas_sparse":
+        from repro.kernels.ops import packs_for_batch
+
+        def sparse_step(g1: GraphBatch, g2: GraphBatch) -> MGKResult:
+            res = mgk_pairs_sparse(g1, g2, packs_for_batch(g1),
+                                   packs_for_batch(g2), vertex_kernel,
+                                   edge_kernel, tol=tol, max_iter=max_iter,
+                                   fixed_iters=fixed_iters,
+                                   pcg_variant=pcg_variant)
+            return MGKResult(values=res.values, iterations=res.iterations,
+                             converged=res.converged, nodal=None)
+
+        return sparse_step
+
     (g1_s, g2_s), out_s = pair_shardings(mesh)
 
     def step(g1: GraphBatch, g2: GraphBatch) -> MGKResult:
         res = mgk_pairs(g1, g2, vertex_kernel, edge_kernel, method=method,
-                        tol=tol, max_iter=max_iter)
+                        tol=tol, max_iter=max_iter,
+                        fixed_iters=fixed_iters, pcg_variant=pcg_variant)
         return MGKResult(values=res.values, iterations=res.iterations,
                          converged=res.converged, nodal=None)
 
@@ -146,6 +174,8 @@ class GramDriver:
     method: str = "lowrank"
     tol: float = 1e-8
     max_iter: int = 256
+    fixed_iters: int | None = None
+    pcg_variant: str = "classic"
     pairs_per_block: int = 64
     normalize: bool = True
 
@@ -171,7 +201,9 @@ class GramDriver:
             ) -> np.ndarray:
         step = gram_pair_step(self.mesh, self.vertex_kernel,
                               self.edge_kernel, method=self.method,
-                              tol=self.tol, max_iter=self.max_iter)
+                              tol=self.tol, max_iter=self.max_iter,
+                              fixed_iters=self.fixed_iters,
+                              pcg_variant=self.pcg_variant)
         blocks = self.blocks()
         by_id = {b.block_id: b for b in blocks}
         done = self.store.done_blocks() if self.store else set()

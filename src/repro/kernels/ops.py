@@ -11,14 +11,14 @@ import jax.numpy as jnp
 from .flash_attention import flash_attention
 from .ref import attention_ref, xmv_batched_ref, xmv_ref
 from .xmv_block_sparse import TilePack, pack_graph, pack_octiles, \
-    xmv_block_sparse
+    xmv_block_sparse, xmv_block_sparse_batched
 from .xmv_dense import pick_tiles, xmv_dense, xmv_dense_batched
 
 __all__ = [
     "xmv_dense", "xmv_dense_batched", "xmv_block_sparse",
-    "xmv_block_sparse_batched", "stack_packs", "pack_graph", "pack_octiles",
-    "TilePack", "flash_attention", "attention_ref", "xmv_ref",
-    "xmv_batched_ref", "pick_tiles",
+    "xmv_block_sparse_batched", "xmv_block_sparse_unrolled", "stack_packs",
+    "pack_graph", "pack_octiles", "TilePack", "flash_attention",
+    "attention_ref", "xmv_ref", "xmv_batched_ref", "pick_tiles",
 ]
 
 
@@ -44,17 +44,20 @@ def packs_for_batch(batch, tile: int = 8) -> TilePack:
                         for o in osets])
 
 
-def xmv_block_sparse_batched(packs1: TilePack, packs2: TilePack, P,
-                             edge_kernel, **kw):
-    """Batched block-sparse XMV: packs carry a leading [B] axis (from
-    stack_packs); unrolled per pair because the scalar-prefetch index maps
-    are per-graph. B is a bucket's batch size (small, static)."""
+def xmv_block_sparse_unrolled(packs1: TilePack, packs2: TilePack, P,
+                              edge_kernel, *, diag=None, **kw):
+    """Legacy loop-of-launches batched block-sparse XMV: one ``pallas_call``
+    (and one jit dispatch) per pair. Superseded by the batched-grid
+    :func:`~repro.kernels.xmv_block_sparse.xmv_block_sparse_batched`
+    (one launch for the whole bucket); kept as the baseline arm of the
+    BENCH_xmv comparison and the parity tests."""
     B = P.shape[0]
     ys = [
         xmv_block_sparse(
             TilePack(*(arr[b] for arr in packs1)),
             TilePack(*(arr[b] for arr in packs2)),
-            P[b], edge_kernel, **kw)
+            P[b], edge_kernel,
+            diag=None if diag is None else diag[b], **kw)
         for b in range(B)
     ]
     return jnp.stack(ys)

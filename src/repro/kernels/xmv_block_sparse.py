@@ -16,6 +16,20 @@ warps nor atomics, so (DESIGN.md §2):
   SMEM and drive the BlockSpec index_maps — the TPU-idiomatic equivalent of
   the warp reading COO coordinates.
 
+Two launch granularities (DESIGN.md §3):
+
+* :func:`xmv_block_sparse` — one pair per ``pallas_call``;
+* :func:`xmv_block_sparse_batched` — a whole bucket of pairs per
+  ``pallas_call``: the pair axis is folded into the grid as its leading
+  (outermost) dimension and the prefetched index arrays carry a [B]
+  axis, so one launch sweeps every pair (the paper Sec. V "many pairs
+  per kernel launch", without B separate dispatches).
+
+Both support a **fused diagonal epilogue**: pass ``diag = D_x V_x^{-1}``
+(reshaped [n, m] / [B, n, m]) and the kernel emits the full CG operator
+application ``diag * p - y`` in the output block's final grid step —
+no extra XLA op or HBM round-trip per CG iteration (DESIGN.md §3).
+
 Intra-tile sparsity (Sec. IV-B, bitmap compaction) lives at the storage
 level: HBM holds only packed non-empty tiles; the kernel computes on dense
 t x t blocks after VMEM expansion, mirroring the paper's "stored compact,
@@ -35,7 +49,8 @@ import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.octile import OctileSet, octile_decompose
 
-__all__ = ["TilePack", "pack_octiles", "xmv_block_sparse"]
+__all__ = ["TilePack", "pack_octiles", "xmv_block_sparse",
+           "xmv_block_sparse_batched"]
 
 
 class TilePack(NamedTuple):
@@ -45,6 +60,9 @@ class TilePack(NamedTuple):
       all-zero (the padding target).
     slot: [n_tile_rows, k_max] int32 -> index into values_*.
     col:  [n_tile_rows, k_max] int32 tile-column (P block index).
+
+    Stacked packs (``ops.stack_packs``) carry a leading [B] axis on every
+    field and feed :func:`xmv_block_sparse_batched`.
     """
     values_adj: jnp.ndarray
     values_lab: jnp.ndarray
@@ -57,7 +75,7 @@ class TilePack(NamedTuple):
 
     @property
     def n_tile_rows(self) -> int:
-        return self.slot.shape[0]
+        return self.slot.shape[-2]
 
 
 def pack_octiles(oset: OctileSet, k_max: int | None = None) -> TilePack:
@@ -98,32 +116,74 @@ def pack_graph(adjacency, edge_labels=None, tile: int = 8,
                                          tile=tile), k_max=k_max)
 
 
+def _contrib(a, e, ap, ep, p, edge_kernel, acc_dtype):
+    """One octile-pair contribution: contract the regenerated [t,t,t,t]
+    product-weight block with the [t, t] P block -> [t, t]."""
+    kappa = edge_kernel(e[:, :, None, None],
+                        ep[None, None, :, :]).astype(acc_dtype)
+    w = a[:, :, None, None] * ap[None, None, :, :] * kappa
+    return jnp.sum(w * p[None, :, None, :], axis=(1, 3))
+
+
 def _kernel(slot_a, col_a, slot_b, col_b,   # scalar-prefetch refs
-            a_ref, e_ref, ap_ref, ep_ref, p_ref, o_ref, *,
-            edge_kernel, acc_dtype):
-    kk, kkp = pl.program_id(2), pl.program_id(3)
+            *refs, edge_kernel, acc_dtype, fused, batched):
+    """Shared kernel body for the per-pair and batched grids.
+
+    Grid layout: (nt, mt, ka, kb) per-pair, (B, nt, mt, ka, kb) batched;
+    the two trailing dims are the reduction over octile slots, so the
+    output block is revisited consecutively and accumulation is race-free.
+    """
+    d = 1 if batched else 0
+    kk, kkp = pl.program_id(2 + d), pl.program_id(3 + d)
+    n_kk, n_kkp = pl.num_programs(2 + d), pl.num_programs(3 + d)
+    if fused:
+        a_ref, e_ref, ap_ref, ep_ref, p_ref, diag_ref, pe_ref, o_ref = refs
+    else:
+        a_ref, e_ref, ap_ref, ep_ref, p_ref, o_ref = refs
+        diag_ref = pe_ref = None
 
     @pl.when(jnp.logical_and(kk == 0, kkp == 0))
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    a = a_ref[0].astype(acc_dtype)     # [t, t]
-    e = e_ref[0]
-    ap = ap_ref[0].astype(acc_dtype)   # [t, t]
-    ep = ep_ref[0]
-    p = p_ref[...].astype(acc_dtype)   # [t, t]
-    kappa = edge_kernel(e[:, :, None, None],
-                        ep[None, None, :, :]).astype(acc_dtype)
-    w = a[:, :, None, None] * ap[None, None, :, :] * kappa
-    o_ref[...] += jnp.sum(w * p[None, :, None, :],
-                          axis=(1, 3)).astype(o_ref.dtype)
+    if batched:
+        a, e = a_ref[0, 0].astype(acc_dtype), e_ref[0, 0]
+        ap, ep = ap_ref[0, 0].astype(acc_dtype), ep_ref[0, 0]
+        p = p_ref[0].astype(acc_dtype)
+    else:
+        a, e = a_ref[0].astype(acc_dtype), e_ref[0]
+        ap, ep = ap_ref[0].astype(acc_dtype), ep_ref[0]
+        p = p_ref[...].astype(acc_dtype)
+    contrib = _contrib(a, e, ap, ep, p, edge_kernel,
+                       acc_dtype).astype(o_ref.dtype)
+    if batched:
+        contrib = contrib[None]
+
+    if not fused:
+        o_ref[...] += contrib
+        return
+
+    acc = o_ref[...] + contrib
+    last = jnp.logical_and(kk == n_kk - 1, kkp == n_kkp - 1)
+
+    @pl.when(last)
+    def _epilogue():
+        # final grid step owns the completed y block: emit diag*p - y
+        o_ref[...] = (diag_ref[...] * pe_ref[...]).astype(o_ref.dtype) - acc
+
+    @pl.when(jnp.logical_not(last))
+    def _accumulate():
+        o_ref[...] = acc
 
 
 @functools.partial(jax.jit, static_argnames=("edge_kernel", "interpret",
                                              "acc_dtype"))
 def xmv_block_sparse(pack1: TilePack, pack2: TilePack, P, edge_kernel, *,
-                     interpret=None, acc_dtype=jnp.float32):
+                     diag=None, interpret=None, acc_dtype=jnp.float32):
     """y = (A (x) A' .* E (x)k E') P using only non-empty octiles.
+
+    With ``diag`` ([n, m]) the kernel instead returns the fused CG operator
+    application ``diag * P - y`` (epilogue in the last reduction step).
 
     Work: O(K1_max_row * K2_max_row * nt * mt * t^4) vs the dense kernel's
     O(n^2 m^2) — the paper's Fig. 9 'Sparse' rung.
@@ -137,37 +197,114 @@ def xmv_block_sparse(pack1: TilePack, pack2: TilePack, P, edge_kernel, *,
                          f" ({nt}x{t}, {mt}x{t})")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    fused = diag is not None
 
+    in_specs = [
+        pl.BlockSpec((1, t, t),
+                     lambda i, ip, kk, kkp, sa, ca, sb, cb:
+                     (sa[i, kk], 0, 0)),
+        pl.BlockSpec((1, t, t),
+                     lambda i, ip, kk, kkp, sa, ca, sb, cb:
+                     (sa[i, kk], 0, 0)),
+        pl.BlockSpec((1, t, t),
+                     lambda i, ip, kk, kkp, sa, ca, sb, cb:
+                     (sb[ip, kkp], 0, 0)),
+        pl.BlockSpec((1, t, t),
+                     lambda i, ip, kk, kkp, sa, ca, sb, cb:
+                     (sb[ip, kkp], 0, 0)),
+        pl.BlockSpec((t, t),
+                     lambda i, ip, kk, kkp, sa, ca, sb, cb:
+                     (ca[i, kk], cb[ip, kkp])),
+    ]
+    inputs = [pack1.values_adj, pack1.values_lab,
+              pack2.values_adj, pack2.values_lab, P]
+    if fused:
+        out_map = lambda i, ip, kk, kkp, sa, ca, sb, cb: (i, ip)  # noqa
+        in_specs += [pl.BlockSpec((t, t), out_map),   # diag block
+                     pl.BlockSpec((t, t), out_map)]   # P at the OUT block
+        inputs += [diag, P]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(nt, mt, ka, kb),
-        in_specs=[
-            pl.BlockSpec((1, t, t),
-                         lambda i, ip, kk, kkp, sa, ca, sb, cb:
-                         (sa[i, kk], 0, 0)),
-            pl.BlockSpec((1, t, t),
-                         lambda i, ip, kk, kkp, sa, ca, sb, cb:
-                         (sa[i, kk], 0, 0)),
-            pl.BlockSpec((1, t, t),
-                         lambda i, ip, kk, kkp, sa, ca, sb, cb:
-                         (sb[ip, kkp], 0, 0)),
-            pl.BlockSpec((1, t, t),
-                         lambda i, ip, kk, kkp, sa, ca, sb, cb:
-                         (sb[ip, kkp], 0, 0)),
-            pl.BlockSpec((t, t),
-                         lambda i, ip, kk, kkp, sa, ca, sb, cb:
-                         (ca[i, kk], cb[ip, kkp])),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (t, t), lambda i, ip, kk, kkp, sa, ca, sb, cb: (i, ip)),
     )
     out = pl.pallas_call(
         functools.partial(_kernel, edge_kernel=edge_kernel,
-                          acc_dtype=acc_dtype),
+                          acc_dtype=acc_dtype, fused=fused, batched=False),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, m), P.dtype),
         interpret=interpret,
-    )(pack1.slot, pack1.col, pack2.slot, pack2.col,
-      pack1.values_adj, pack1.values_lab,
-      pack2.values_adj, pack2.values_lab, P)
+    )(pack1.slot, pack1.col, pack2.slot, pack2.col, *inputs)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("edge_kernel", "interpret",
+                                             "acc_dtype"))
+def xmv_block_sparse_batched(packs1: TilePack, packs2: TilePack, P,
+                             edge_kernel, *, diag=None, interpret=None,
+                             acc_dtype=jnp.float32):
+    """Whole-bucket block-sparse XMV in ONE ``pallas_call``.
+
+    ``packs1``/``packs2`` are stacked TilePacks (``ops.stack_packs``) with a
+    leading [B] axis on every field; ``P`` is [B, n, m]. The pair axis is
+    the outermost grid dimension and the scalar-prefetch index maps select
+    per-pair tiles via ``slot[b, i, k]`` — replacing B dispatches (and B
+    jit boundaries) per CG iteration with one (paper Sec. V).
+
+    With ``diag`` ([B, n, m]) the fused epilogue emits ``diag * P - y``.
+    """
+    B = packs1.values_adj.shape[0]
+    t = packs1.values_adj.shape[-1]
+    nt, mt = packs1.slot.shape[1], packs2.slot.shape[1]
+    ka, kb = packs1.slot.shape[2], packs2.slot.shape[2]
+    Bp, n, m = P.shape
+    if Bp != B:
+        raise ValueError(f"P batch {Bp} != pack batch {B}")
+    if n != nt * t or m != mt * t:
+        raise ValueError(f"P shape {P.shape} inconsistent with tile packs"
+                         f" ({nt}x{t}, {mt}x{t})")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fused = diag is not None
+
+    in_specs = [
+        pl.BlockSpec((1, 1, t, t),
+                     lambda b, i, ip, kk, kkp, sa, ca, sb, cb:
+                     (b, sa[b, i, kk], 0, 0)),
+        pl.BlockSpec((1, 1, t, t),
+                     lambda b, i, ip, kk, kkp, sa, ca, sb, cb:
+                     (b, sa[b, i, kk], 0, 0)),
+        pl.BlockSpec((1, 1, t, t),
+                     lambda b, i, ip, kk, kkp, sa, ca, sb, cb:
+                     (b, sb[b, ip, kkp], 0, 0)),
+        pl.BlockSpec((1, 1, t, t),
+                     lambda b, i, ip, kk, kkp, sa, ca, sb, cb:
+                     (b, sb[b, ip, kkp], 0, 0)),
+        pl.BlockSpec((1, t, t),
+                     lambda b, i, ip, kk, kkp, sa, ca, sb, cb:
+                     (b, ca[b, i, kk], cb[b, ip, kkp])),
+    ]
+    inputs = [packs1.values_adj, packs1.values_lab,
+              packs2.values_adj, packs2.values_lab, P]
+    if fused:
+        out_map = lambda b, i, ip, kk, kkp, sa, ca, sb, cb: (b, i, ip)  # noqa
+        in_specs += [pl.BlockSpec((1, t, t), out_map),
+                     pl.BlockSpec((1, t, t), out_map)]
+        inputs += [diag, P]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(B, nt, mt, ka, kb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, t, t), lambda b, i, ip, kk, kkp, sa, ca, sb, cb: (b, i, ip)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, edge_kernel=edge_kernel,
+                          acc_dtype=acc_dtype, fused=fused, batched=True),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, n, m), P.dtype),
+        interpret=interpret,
+    )(packs1.slot, packs1.col, packs2.slot, packs2.col, *inputs)
     return out

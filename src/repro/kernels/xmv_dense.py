@@ -32,10 +32,16 @@ from jax.experimental import pallas as pl
 __all__ = ["xmv_dense", "xmv_dense_batched", "pick_tiles"]
 
 
-def _kernel(a_ref, e_ref, ap_ref, ep_ref, p_ref, o_ref, *, edge_kernel,
-            acc_dtype):
+def _kernel(*refs, edge_kernel, acc_dtype, fused):
     """One grid step: o[TI, TIP] += contract((A,E) TIxTJ, (A',E') TIPxTJP,
-    P TJxTJP)."""
+    P TJxTJP). With ``fused``, the last reduction step instead emits the
+    whole CG operator application diag*p - y for this output block
+    (DESIGN.md §3)."""
+    if fused:
+        a_ref, e_ref, ap_ref, ep_ref, p_ref, diag_ref, pe_ref, o_ref = refs
+    else:
+        a_ref, e_ref, ap_ref, ep_ref, p_ref, o_ref = refs
+        diag_ref = pe_ref = None
     j, l = pl.program_id(2), pl.program_id(3)
 
     @pl.when(jnp.logical_and(j == 0, l == 0))
@@ -52,18 +58,44 @@ def _kernel(a_ref, e_ref, ap_ref, ep_ref, p_ref, o_ref, *, edge_kernel,
                         ep[None, None, :, :]).astype(acc_dtype)
     w = a[:, :, None, None] * ap[None, None, :, :] * kappa
     contrib = jnp.sum(w * p[None, :, None, :], axis=(1, 3))   # [TI, TIP]
-    o_ref[...] += contrib.astype(o_ref.dtype)
+
+    if not fused:
+        o_ref[...] += contrib.astype(o_ref.dtype)
+        return
+
+    acc = o_ref[...] + contrib.astype(o_ref.dtype)
+    last = jnp.logical_and(j == pl.num_programs(2) - 1,
+                           l == pl.num_programs(3) - 1)
+
+    @pl.when(last)
+    def _epilogue():
+        o_ref[...] = (diag_ref[...] * pe_ref[...]).astype(o_ref.dtype) - acc
+
+    @pl.when(jnp.logical_not(last))
+    def _accumulate():
+        o_ref[...] = acc
 
 
 def _divisor_tile(dim: int, target: int, quantum: int = 8) -> int:
-    """Largest multiple of ``quantum`` that divides ``dim`` and is <= target
-    (falls back to dim itself for small inputs)."""
+    """Largest multiple of ``quantum`` that divides ``dim`` and is <=
+    target; falls back to the largest plain divisor in [2, target]. A
+    prime-ish ``dim`` whose only divisors are 1 and itself is rejected —
+    the old behavior of returning ``dim`` silently blew the VMEM budget
+    once the 4D regeneration tile scaled with it."""
     if dim <= target:
         return dim
     for cand in range(target, 0, -quantum):
         if cand % quantum == 0 and dim % cand == 0:
             return cand
-    return quantum if dim % quantum == 0 else dim
+    if dim % quantum == 0:
+        return quantum
+    for cand in range(min(target, dim - 1), 1, -1):
+        if dim % cand == 0:
+            return cand
+    raise ValueError(
+        f"dim={dim} has no tile divisor in [2, {target}]; pad the graph "
+        f"batch to a multiple of {quantum} (e.g. batch_from_graphs("
+        f"pad_to=...)) so the dense XMV kernel can tile it")
 
 
 def pick_tiles(n: int, m: int) -> tuple[int, int, int, int]:
@@ -83,9 +115,12 @@ def pick_tiles(n: int, m: int) -> tuple[int, int, int, int]:
 @functools.partial(
     jax.jit,
     static_argnames=("edge_kernel", "tiles", "interpret", "acc_dtype"))
-def xmv_dense(A, E, Ap, Ep, P, edge_kernel, *, tiles=None, interpret=None,
-              acc_dtype=jnp.float32):
-    """Single-pair on-the-fly XMV. A,E: [n,n]; Ap,Ep: [m,m]; P: [n,m]."""
+def xmv_dense(A, E, Ap, Ep, P, edge_kernel, *, diag=None, tiles=None,
+              interpret=None, acc_dtype=jnp.float32):
+    """Single-pair on-the-fly XMV. A,E: [n,n]; Ap,Ep: [m,m]; P: [n,m].
+
+    With ``diag`` ([n, m]) the fused epilogue emits ``diag * P - y``
+    in-kernel — the full CG operator application with no extra XLA op."""
     n, m = A.shape[0], Ap.shape[0]
     if tiles is None:
         tiles = pick_tiles(n, m)
@@ -94,30 +129,41 @@ def xmv_dense(A, E, Ap, Ep, P, edge_kernel, *, tiles=None, interpret=None,
         raise ValueError(f"tiles {tiles} must divide shapes n={n}, m={m}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    fused = diag is not None
     grid = (n // ti, m // tip, n // tj, m // tjp)
+    in_specs = [
+        pl.BlockSpec((ti, tj), lambda i, k, j, l: (i, j)),
+        pl.BlockSpec((ti, tj), lambda i, k, j, l: (i, j)),
+        pl.BlockSpec((tip, tjp), lambda i, k, j, l: (k, l)),
+        pl.BlockSpec((tip, tjp), lambda i, k, j, l: (k, l)),
+        pl.BlockSpec((tj, tjp), lambda i, k, j, l: (j, l)),
+    ]
+    inputs = [A, E, Ap, Ep, P]
+    if fused:
+        in_specs += [pl.BlockSpec((ti, tip), lambda i, k, j, l: (i, k)),
+                     pl.BlockSpec((ti, tip), lambda i, k, j, l: (i, k))]
+        inputs += [diag, P]
     out = pl.pallas_call(
         functools.partial(_kernel, edge_kernel=edge_kernel,
-                          acc_dtype=acc_dtype),
+                          acc_dtype=acc_dtype, fused=fused),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((ti, tj), lambda i, k, j, l: (i, j)),
-            pl.BlockSpec((ti, tj), lambda i, k, j, l: (i, j)),
-            pl.BlockSpec((tip, tjp), lambda i, k, j, l: (k, l)),
-            pl.BlockSpec((tip, tjp), lambda i, k, j, l: (k, l)),
-            pl.BlockSpec((tj, tjp), lambda i, k, j, l: (j, l)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((ti, tip), lambda i, k, j, l: (i, k)),
         out_shape=jax.ShapeDtypeStruct((n, m), P.dtype),
         interpret=interpret,
-    )(A, E, Ap, Ep, P)
+    )(*inputs)
     return out
 
 
-def xmv_dense_batched(A, E, Ap, Ep, P, edge_kernel, *, tiles=None,
-                      interpret=None):
+def xmv_dense_batched(A, E, Ap, Ep, P, edge_kernel, *, diag=None,
+                      tiles=None, interpret=None):
     """Batched over pairs: leading axis B on every operand (the TPU
-    analogue of 'many graph pairs per kernel launch', paper Sec. V)."""
+    analogue of 'many graph pairs per kernel launch', paper Sec. V).
+    ``diag`` ([B, n, m], optional) selects the fused-epilogue kernel."""
     fn = functools.partial(xmv_dense, edge_kernel=edge_kernel, tiles=tiles,
                            interpret=interpret)
-    return jax.vmap(lambda a, e, ap, ep, p: fn(a, e, ap, ep, p))(
-        A, E, Ap, Ep, P)
+    if diag is None:
+        return jax.vmap(lambda a, e, ap, ep, p: fn(a, e, ap, ep, p))(
+            A, E, Ap, Ep, P)
+    return jax.vmap(lambda a, e, ap, ep, p, d: fn(a, e, ap, ep, p, diag=d))(
+        A, E, Ap, Ep, P, diag)

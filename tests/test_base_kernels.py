@@ -3,7 +3,7 @@ positive-definiteness."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.base_kernels import (CompactPolynomial, Constant,
                                      KroneckerDelta, SquareExponential)

@@ -1,6 +1,6 @@
 """Data pipeline: generators + bucketing loader."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.graph import Graph, batch_from_graphs
 from repro.data import (bucket_graphs, make_drugbank_like_dataset,

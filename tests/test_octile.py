@@ -1,6 +1,6 @@
 """Octile decomposition: roundtrip, bitmap correctness, counting."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.octile import (count_nonempty_tiles, expand_octiles,
                                octile_decompose, tile_occupancy_histogram)

@@ -1,7 +1,7 @@
 """Batched masked PCG vs LAPACK."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.pcg import pcg_solve
 

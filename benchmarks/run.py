@@ -28,7 +28,8 @@ def main(argv=None) -> None:
     if args.smoke:
         from . import primitives
         primitives.run(sizes=(32,))
-        xmv_bench.run(sizes=(2, 8), pad_to=16, iters=3)
+        xmv_bench.run(sizes=(2, 8), pad_to=32, iters=3, tiles=(8, 16, 32),
+                      tile_B=2)
         return
     from . import primitives, reorder_bench, adaptive, incremental, \
         packages, roofline

@@ -1,22 +1,40 @@
-"""PR 1 perf tracking: the CG hot-path before/after comparison.
+"""PR 1/2 perf tracking: the CG hot-path before/after comparison.
 
 Emits ``BENCH_xmv.json`` with
 
-* per-matvec wall time of the block-sparse bucket XMV, legacy
-  loop-of-launches (one ``pallas_call`` + jit dispatch per pair) vs the
-  batched grid (ONE launch for the whole bucket), at several bucket
-  sizes B;
+* per-matvec wall time of the block-sparse bucket XMV across the three
+  kernel generations at several bucket sizes B: legacy loop-of-launches
+  (one ``pallas_call`` + jit dispatch per pair), the PR-1 batched
+  unrolled grid (one launch, a grid step per (slot, slot') pair), and
+  the PR-2 row-panel kernel (one launch, one grid step per output
+  block, in-kernel slot reduction over VMEM-staged tile rows) in both
+  its elementwise and MXU-contraction modes;
+* the same arms swept over octile edge t in {8, 16, 32} (the t^4 VPU
+  broadcast vs rank-batched MXU matmul scaling; on this CPU harness the
+  MXU mode's matmuls only pull ahead of the elementwise tensor at t=32,
+  where 2*R*t^3 < t^4 — on real MXU hardware the crossover is earlier);
 * fused diagonal epilogue vs the two-step ``diag*p - y`` reference on
   the dense batched path;
 * classic vs pipelined PCG on the same product systems: wall time per
-  solve and the per-pair iteration counts (must agree within ±1).
+  solve, *marginal* wall time per iteration (obtained by differencing
+  two ``fixed_iters`` trip counts, which cancels setup/dispatch
+  overhead), and the per-pair iteration counts (must agree within ±1).
 
 Numbers here come from the CPU/interpret harness — the absolute times
-are not TPU times, but the *launch-count* effect the batched grid
-removes (B separate kernel dispatches per CG iteration in the legacy
-eager path) is exactly what they measure: both arms are timed as they
-were invoked from the driver, i.e. the legacy arm pays its per-pair
-dispatch just as ``ops.xmv_block_sparse_batched`` (the Python loop) did.
+are not TPU times, but the *launch/grid-step count* effects the batched
+grid and the row-panel kernel remove are exactly what they measure.
+
+On the pipelined-PCG column: PR 1 recorded pipelined ~27% slower per
+solve than classic here despite identical iteration counts. That is an
+artifact of the harness, not a solver regression — see the
+``pcg["note"]`` field this module emits and DESIGN.md §3.3: each
+pipelined iteration runs ~2x the [B, n*m] vector updates (p, s, x, r, u
+recurrences + masking vs classic's three AXPYs) plus one extra matvec at
+setup (w0 = A u0), costs that XLA op overhead amplifies on a single
+interpret-mode CPU device, while the benefit — one all-reduce round per
+iteration instead of two — only exists when CG dot products cross
+devices. The marginal per-iteration numbers keep the two effects from
+being conflated with launch overhead.
 """
 from __future__ import annotations
 
@@ -30,13 +48,29 @@ from repro.core.base_kernels import KroneckerDelta, SquareExponential
 from repro.core.graph import batch_from_graphs
 from repro.core.mgk import mgk_pairs_sparse
 from repro.data import make_drugbank_like_dataset
-from repro.kernels.ops import packs_for_batch, xmv_block_sparse_unrolled
-from repro.kernels.xmv_block_sparse import xmv_block_sparse_batched
+from repro.kernels.ops import packs_for_batch, row_panel_packs_for_batch, \
+    xmv_block_sparse_unrolled
+from repro.kernels.xmv_block_sparse import xmv_block_sparse_batched, \
+    xmv_row_panel_batched
 from repro.kernels.xmv_dense import xmv_dense_batched
 from .common import row, time_fn
 
 VK = KroneckerDelta(0.5, n_labels=8)
 EK = SquareExponential(1.0, rank=12)
+
+PCG_NOTE = (
+    "pipelined > classic per solve on this single-device interpret"
+    " harness is expected, not a regression: iteration counts are"
+    " identical, but each pipelined iteration performs ~2x the [B, n*m]"
+    " vector updates (p/s/x/r/u recurrences + convergence masking vs"
+    " classic's three AXPYs) plus one extra matvec at setup (w0 = A u0)."
+    " The variant trades those flops for ONE cross-device all-reduce"
+    " round per iteration instead of two; with no 'model'-axis sharding"
+    " here there is no reduction latency to win back, so only the extra"
+    " vector work is visible. us_per_iteration_marginal (fixed_iters"
+    " differencing) isolates the loop body from dispatch/setup overhead"
+    " so reduction-latency wins on real meshes aren't conflated with"
+    " interpret-mode op overhead.")
 
 
 def _bucket(B: int, pad_to: int, seed: int = 7):
@@ -54,40 +88,88 @@ def _bucket(B: int, pad_to: int, seed: int = 7):
     gs = gs[:2 * B]
     g1 = batch_from_graphs(gs[:B], pad_to=pad_to)
     g2 = batch_from_graphs(gs[B:], pad_to=pad_to)
-    return g1, g2, packs_for_batch(g1), packs_for_batch(g2)
+    return g1, g2
+
+
+def _sparse_arms(g1, g2, P, iters, tile: int = 8, with_unrolled=True):
+    """Time every block-sparse kernel generation on one bucket."""
+    p1 = packs_for_batch(g1, tile=tile)
+    p2 = packs_for_batch(g2, tile=tile)
+    r1 = row_panel_packs_for_batch(g1, tile=tile)
+    r2 = row_panel_packs_for_batch(g2, tile=tile)
+    r1w = row_panel_packs_for_batch(g1, tile=tile, edge_kernel=EK)
+    r2w = row_panel_packs_for_batch(g2, tile=tile, edge_kernel=EK)
+    out = {}
+    if with_unrolled:
+        out["us_per_matvec_unrolled"] = time_fn(
+            lambda P: xmv_block_sparse_unrolled(p1, p2, P, EK),
+            P, iters=iters)
+    out["us_per_matvec_batched"] = time_fn(
+        lambda P: xmv_block_sparse_batched(p1, p2, P, EK), P, iters=iters)
+    out["us_per_matvec_row_panel"] = time_fn(
+        lambda P: xmv_row_panel_batched(r1, r2, P, EK, mode="elementwise"),
+        P, iters=iters)
+    out["us_per_matvec_row_panel_mxu"] = time_fn(
+        lambda P: xmv_row_panel_batched(r1w, r2w, P, EK, mode="mxu"),
+        P, iters=iters)
+    return out
 
 
 def run(out_path: str = "BENCH_xmv.json", sizes=(2, 8, 16),
-        pad_to: int = 16, iters: int = 5) -> dict:
+        pad_to: int = 32, iters: int = 5, tiles=(8, 16, 32),
+        tile_pad_to: int = 32, tile_B: int = 4) -> dict:
     rng = np.random.default_rng(0)
-    report: dict = {"matvec_block_sparse": [], "fused_epilogue": {},
-                    "pcg": {}}
+    report: dict = {"matvec_block_sparse": [], "matvec_tile_sweep": [],
+                    "fused_epilogue": {}, "pcg": {}}
 
     for B in sizes:
-        g1, g2, p1, p2 = _bucket(B, pad_to)
+        g1, g2 = _bucket(B, pad_to)
         n = g1.adjacency.shape[1]
         P = jnp.asarray(rng.random((B, n, n)).astype(np.float32))
+        arms = _sparse_arms(g1, g2, P, iters)
+        batched = arms["us_per_matvec_batched"]
+        entry = {"B": B, "n": n, "tile": 8, **arms,
+                 "speedup": arms["us_per_matvec_unrolled"]
+                 / max(batched, 1e-9),
+                 "speedup_row_panel_vs_batched": batched
+                 / max(arms["us_per_matvec_row_panel"], 1e-9),
+                 "speedup_row_panel_mxu_vs_batched": batched
+                 / max(arms["us_per_matvec_row_panel_mxu"], 1e-9)}
+        report["matvec_block_sparse"].append(entry)
+        row(f"xmv_sparse_unrolled_B{B}", arms["us_per_matvec_unrolled"],
+            "loop-of-launches")
+        row(f"xmv_sparse_batched_B{B}", batched,
+            f"one-launch-speedup={entry['speedup']:.2f}x")
+        row(f"xmv_sparse_row_panel_B{B}", arms["us_per_matvec_row_panel"],
+            f"vs-batched={entry['speedup_row_panel_vs_batched']:.2f}x")
+        row(f"xmv_sparse_row_panel_mxu_B{B}",
+            arms["us_per_matvec_row_panel_mxu"],
+            f"vs-batched={entry['speedup_row_panel_mxu_vs_batched']:.2f}x")
 
-        us_unrolled = time_fn(
-            lambda P: xmv_block_sparse_unrolled(p1, p2, P, EK),
-            P, iters=iters)
-        us_batched = time_fn(
-            lambda P: xmv_block_sparse_batched(p1, p2, P, EK),
-            P, iters=iters)
-        speedup = us_unrolled / max(us_batched, 1e-9)
-        report["matvec_block_sparse"].append({
-            "B": B, "n": n,
-            "us_per_matvec_unrolled": us_unrolled,
-            "us_per_matvec_batched": us_batched,
-            "speedup": speedup,
-        })
-        row(f"xmv_sparse_unrolled_B{B}", us_unrolled, "loop-of-launches")
-        row(f"xmv_sparse_batched_B{B}", us_batched,
-            f"one-launch-speedup={speedup:.2f}x")
+    # octile-edge sweep: the t^4 VPU tensor vs rank-batched MXU matmuls
+    for t in tiles:
+        if tile_pad_to % t:
+            continue
+        g1, g2 = _bucket(tile_B, tile_pad_to)
+        n = g1.adjacency.shape[1]
+        P = jnp.asarray(rng.random((tile_B, n, n)).astype(np.float32))
+        arms = _sparse_arms(g1, g2, P, iters, tile=t, with_unrolled=False)
+        batched = arms["us_per_matvec_batched"]
+        entry = {"B": tile_B, "n": n, "tile": t, **arms,
+                 "speedup_row_panel_vs_batched": batched
+                 / max(arms["us_per_matvec_row_panel"], 1e-9),
+                 "speedup_row_panel_mxu_vs_batched": batched
+                 / max(arms["us_per_matvec_row_panel_mxu"], 1e-9)}
+        report["matvec_tile_sweep"].append(entry)
+        row(f"xmv_sparse_row_panel_t{t}", arms["us_per_matvec_row_panel"],
+            f"vs-batched={entry['speedup_row_panel_vs_batched']:.2f}x")
+        row(f"xmv_sparse_row_panel_mxu_t{t}",
+            arms["us_per_matvec_row_panel_mxu"],
+            f"vs-batched={entry['speedup_row_panel_mxu_vs_batched']:.2f}x")
 
     # fused diagonal epilogue vs separate XLA op (dense path, largest B)
     B = sizes[-1]
-    g1, g2, p1, p2 = _bucket(B, pad_to)
+    g1, g2 = _bucket(B, pad_to)
     n = g1.adjacency.shape[1]
     P = jnp.asarray(rng.random((B, n, n)).astype(np.float32))
     diag = jnp.asarray(rng.random((B, n, n)).astype(np.float32) + 1.0)
@@ -109,26 +191,37 @@ def run(out_path: str = "BENCH_xmv.json", sizes=(2, 8, 16),
     row(f"xmv_dense_unfused_B{B}", us_unfused, "separate-diag-op")
     row(f"xmv_dense_fused_B{B}", us_fused, "in-kernel-epilogue")
 
-    # classic vs pipelined PCG on the real sparse product systems
-    pcg = {}
+    # classic vs pipelined PCG on the real sparse product systems (the
+    # production row-panel MXU matvec)
+    p1 = row_panel_packs_for_batch(g1, edge_kernel=EK)
+    p2 = row_panel_packs_for_batch(g2, edge_kernel=EK)
+    pcg: dict = {}
+    k_lo, k_hi = 5, 15
     for variant in ("classic", "pipelined"):
-        us = time_fn(
-            lambda g1=g1, g2=g2: mgk_pairs_sparse(
-                g1, g2, p1, p2, VK, EK, tol=1e-10,
-                pcg_variant=variant).values,
-            iters=max(2, iters // 2))
+        def solve(fixed=None, variant=variant):
+            return mgk_pairs_sparse(g1, g2, p1, p2, VK, EK, tol=1e-10,
+                                    fixed_iters=fixed,
+                                    pcg_variant=variant).values
+
+        us = time_fn(solve, iters=max(2, iters // 2))
+        us_lo = time_fn(lambda: solve(k_lo), iters=max(2, iters // 2))
+        us_hi = time_fn(lambda: solve(k_hi), iters=max(2, iters // 2))
+        us_iter = (us_hi - us_lo) / (k_hi - k_lo)
         res = mgk_pairs_sparse(g1, g2, p1, p2, VK, EK, tol=1e-10,
                                pcg_variant=variant)
         pcg[variant] = {
             "us_per_solve": us,
+            "us_per_iteration_marginal": us_iter,
             "iterations": np.asarray(res.iterations).tolist(),
             "converged": bool(np.asarray(res.converged).all()),
         }
         row(f"pcg_{variant}_B{B}", us,
-            f"iters={int(np.asarray(res.iterations).max())}")
+            f"iters={int(np.asarray(res.iterations).max())}"
+            f",us/iter={us_iter:.1f}")
     pcg["max_iteration_gap"] = int(np.abs(
         np.asarray(pcg["classic"]["iterations"])
         - np.asarray(pcg["pipelined"]["iterations"])).max())
+    pcg["note"] = PCG_NOTE
     report["pcg"] = pcg
 
     with open(out_path, "w") as f:

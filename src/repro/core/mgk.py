@@ -8,7 +8,11 @@ computed with the batched PCG of core/pcg.py and one of the XMV backends:
            "elementwise"  paper-faithful streaming XMV (jnp)
            "lowrank"      beyond-paper MXU sandwich (feature expansion)
            "pallas"       Pallas TPU tiling&blocking kernel
-           "pallas_sparse" Pallas block-sparse octile kernel
+           "pallas_sparse" Pallas block-sparse octile kernel; row-panel
+                          packs select the VMEM-staged row-panel kernel
+                          whose in-kernel slot reduction runs either
+                          elementwise (VPU) or as the MXU low-rank
+                          contraction (``sparse_mode``)
            "adaptive"     density-based host dispatch (paper Sec. IV-B)
 
 Batched over pairs: both operands are GraphBatch pytrees of equal batch
@@ -177,23 +181,38 @@ def mgk_adaptive(g1: GraphBatch, g2: GraphBatch,
                  vertex_kernel: BaseKernel = Constant(1.0),
                  edge_kernel: BaseKernel = Constant(1.0),
                  *, density_threshold: float = 0.15,
+                 tile: int = 8,
                  tol: float = 1e-10, max_iter: int = 512,
                  fixed_iters: int | None = None,
                  pcg_variant: str = "classic") -> MGKResult:
     """The paper's adaptive primitive switch (Sec. IV-B), lifted to the
     bucket level: pick the XMV backend per pair-batch from the octile
-    density statistic.
+    density statistic AND the edge kernel's feature expansion
+    (DESIGN.md §3 dispatch table):
 
-    * kernels with a usable feature expansion -> low-rank MXU sandwich
-      (dominates on TPU whenever R << density * n, which is essentially
-      always for R <= 16 — see EXPERIMENTS §Perf cell C);
-    * no expansion + sparse octiles -> block-sparse Pallas path;
-    * no expansion + dense graphs   -> dense tiling&blocking path.
+    =============  ==================  =====================================
+    octile dens.   feature expansion   backend
+    =============  ==================  =====================================
+    < threshold    usable              sparse row-panel, MXU contraction
+    < threshold    none                sparse row-panel, elementwise (VPU)
+    >= threshold   usable              dense low-rank MXU sandwich
+    >= threshold   none                dense tiling&blocking Pallas kernel
+    =============  ==================  =====================================
+
+    "usable" = ``feature_rank()`` is not None, the rank is small against
+    ``density * n``, and the labels stay inside the expansion's accuracy
+    domain (the SE Taylor truncation) — otherwise exact elementwise paths.
+
+    ``tile`` is the octile edge for the sparse paths; it is shrunk to the
+    largest of {tile, 16, 8} dividing the bucket's padded size, so any
+    8-aligned bucket works.
     """
     import numpy as np
     rank = edge_kernel.feature_rank()
-    n = g1.adjacency.shape[1]
-    dens = max(tile_density(g1), tile_density(g2))
+    n, m = g1.adjacency.shape[1], g2.adjacency.shape[1]
+    while tile > 8 and (n % tile or m % tile):
+        tile //= 2
+    dens = max(tile_density(g1, tile), tile_density(g2, tile))
     # the SE Taylor expansion is only accurate within its label domain —
     # outside it, fall back to exact elementwise paths
     domain = getattr(edge_kernel, "domain", None)
@@ -202,17 +221,22 @@ def mgk_adaptive(g1: GraphBatch, g2: GraphBatch,
                    float(np.abs(np.asarray(g2.edge_labels)).max()))
         if lmax > domain:
             rank = None
-    if rank is not None and rank <= max(16, dens * n):
+    rank_usable = rank is not None and rank <= max(16, dens * n)
+    if dens < density_threshold:
+        from repro.kernels.ops import row_panel_packs_for_batch
+        ek_pack = edge_kernel if rank_usable else None
+        return mgk_pairs_sparse(
+            g1, g2,
+            row_panel_packs_for_batch(g1, tile=tile, edge_kernel=ek_pack),
+            row_panel_packs_for_batch(g2, tile=tile, edge_kernel=ek_pack),
+            vertex_kernel, edge_kernel,
+            sparse_mode="mxu" if rank_usable else "elementwise",
+            tol=tol, max_iter=max_iter, fixed_iters=fixed_iters,
+            pcg_variant=pcg_variant)
+    if rank_usable:
         return mgk_pairs(g1, g2, vertex_kernel, edge_kernel,
                          method="lowrank", tol=tol, max_iter=max_iter,
                          fixed_iters=fixed_iters, pcg_variant=pcg_variant)
-    if dens < density_threshold:
-        from repro.kernels.ops import packs_for_batch
-        return mgk_pairs_sparse(g1, g2, packs_for_batch(g1),
-                                packs_for_batch(g2), vertex_kernel,
-                                edge_kernel, tol=tol, max_iter=max_iter,
-                                fixed_iters=fixed_iters,
-                                pcg_variant=pcg_variant)
     return mgk_pairs(g1, g2, vertex_kernel, edge_kernel, method="pallas",
                      tol=tol, max_iter=max_iter, fixed_iters=fixed_iters,
                      pcg_variant=pcg_variant)
@@ -221,15 +245,17 @@ def mgk_adaptive(g1: GraphBatch, g2: GraphBatch,
 @functools.partial(
     jax.jit,
     static_argnames=("vertex_kernel", "edge_kernel", "max_iter",
-                     "return_nodal", "fixed_iters", "pcg_variant"))
+                     "return_nodal", "fixed_iters", "pcg_variant",
+                     "sparse_mode"))
 def mgk_pairs_sparse(
     g1: GraphBatch,
     g2: GraphBatch,
-    packs1,                      # stacked TilePack [B, ...] (stack_packs)
+    packs1,                      # stacked RowPanelPack or legacy TilePack
     packs2,
     vertex_kernel: BaseKernel = Constant(1.0),
     edge_kernel: BaseKernel = Constant(1.0),
     *,
+    sparse_mode: str = "auto",
     tol: float = 1e-10,
     max_iter: int = 512,
     return_nodal: bool = False,
@@ -238,14 +264,20 @@ def mgk_pairs_sparse(
 ) -> MGKResult:
     """Block-sparse-octile variant of mgk_pairs (paper Sec. IV).
 
-    The TilePacks are host-preprocessed (pack_octiles after reordering) —
-    the quadratic CG work then touches only non-empty octiles. GraphBatch
-    still supplies the diagonal/probability vectors (cheap, O(n+m)).
+    The packs are host-preprocessed (``row_panel_packs_for_batch`` /
+    ``packs_for_batch`` after reordering) — the quadratic CG work then
+    touches only non-empty octiles. GraphBatch still supplies the
+    diagonal/probability vectors (cheap, O(n+m)).
 
-    The whole bucket's matvec is ONE batched-grid ``pallas_call`` with the
-    diagonal epilogue fused in-kernel (DESIGN.md §3); shares mgk_pairs'
+    Stacked :class:`~repro.kernels.xmv_block_sparse.RowPanelPack` inputs
+    run the row-panel kernel (VMEM tile-row reuse, in-kernel slot
+    reduction; ``sparse_mode`` picks "elementwise" / "mxu" / "auto");
+    stacked legacy TilePacks run the unrolled-grid baseline. Either way
+    the whole bucket's matvec is ONE ``pallas_call`` with the diagonal
+    epilogue fused in-kernel (DESIGN.md §3); shares mgk_pairs'
     ``fixed_iters``/``pcg_variant`` contract."""
-    from repro.kernels.ops import xmv_block_sparse_batched
+    from repro.kernels.ops import RowPanelPack, xmv_block_sparse_batched, \
+        xmv_row_panel_batched
 
     sys_ = build_product_system(g1, g2, vertex_kernel)
     B, n = g1.adjacency.shape[0], g1.adjacency.shape[1]
@@ -255,8 +287,12 @@ def mgk_pairs_sparse(
 
     def matvec(p_vec):
         P = p_vec.reshape(B, n, m)
-        out = xmv_block_sparse_batched(packs1, packs2, P, edge_kernel,
-                                       diag=diag_nm)
+        if isinstance(packs1, RowPanelPack):
+            out = xmv_row_panel_batched(packs1, packs2, P, edge_kernel,
+                                        diag=diag_nm, mode=sparse_mode)
+        else:
+            out = xmv_block_sparse_batched(packs1, packs2, P, edge_kernel,
+                                           diag=diag_nm)
         return out.reshape(B, -1)
 
     rhs = sys_.dx * sys_.qx

@@ -6,13 +6,21 @@ coordinate (COO-of-tiles) format sorted by (row_tile, col_tile) so that the
 TPU block-sparse kernel owns each output block with a contiguous grid range
 (the collision-free replacement for the paper's atomics, DESIGN.md §2).
 
-Level 2 (intra-tile): each stored tile carries a 64-bit occupancy bitmap
-(bit i*t+j set iff element (i, j) of the tile is nonzero) plus the packed
-nonzero values. On TPU the compact values are expanded into VMEM before
-compute, mirroring the paper's "stored compact, expanded in shared memory".
+Level 2 (intra-tile): each stored tile carries a multi-word occupancy
+bitmap (bit q = i*t + j of word q // 64 is set iff element (i, j) of the
+tile is nonzero) plus the packed nonzero values. A t = 8 octile fits one
+uint64 word; t = 16 takes 4 words, t = 32 takes 16 — the tile edge is a
+parameter throughout the stack (``TILE`` is only the paper's default). On
+TPU the compact values are expanded into VMEM before compute, mirroring
+the paper's "stored compact, expanded in shared memory".
 
-All functions here are host-side (numpy) preprocessing; their output feeds
-the device kernels as dense padded arrays + int32 coordinate lists.
+All functions here are host-side (numpy) preprocessing; they run once per
+graph per Gram block, so every per-tile loop is vectorized — at dataset
+scale (millions of pair blocks) Python-level tile loops dominate the
+preprocessing wall clock otherwise.
+
+Their output feeds the device kernels as dense padded arrays + int32
+coordinate lists.
 """
 from __future__ import annotations
 
@@ -26,9 +34,43 @@ __all__ = [
     "count_nonempty_tiles",
     "tile_occupancy_histogram",
     "expand_octiles",
+    "bitmap_popcounts",
+    "bitmap_words",
 ]
 
-TILE = 8  # the paper's octile edge length
+TILE = 8  # the paper's octile edge length (default, not a constraint)
+
+
+def bitmap_words(tile: int) -> int:
+    """Number of 64-bit words an occupancy bitmap of a t x t tile needs."""
+    return -(-(tile * tile) // 64)
+
+
+def bitmap_popcounts(bitmaps: np.ndarray) -> np.ndarray:
+    """[K, W] uint64 multi-word bitmaps -> [K] per-tile popcounts.
+
+    Vectorized via a uint8 view + ``np.unpackbits`` (endianness is
+    irrelevant to a popcount). A 1-D [K] input (single-word bitmaps) is
+    treated as [K, 1].
+    """
+    bitmaps = np.asarray(bitmaps, np.uint64)
+    if bitmaps.ndim == 1:
+        bitmaps = bitmaps[:, None]
+    if bitmaps.shape[0] == 0:
+        return np.zeros((0,), np.int64)
+    bits = np.unpackbits(bitmaps.view(np.uint8), axis=1)
+    return bits.sum(axis=1).astype(np.int64)
+
+
+def _pack_bitmaps(nz: np.ndarray, tile: int) -> np.ndarray:
+    """[K, t, t] bool occupancy -> [K, W] uint64 multi-word bitmaps."""
+    K = nz.shape[0]
+    W = bitmap_words(tile)
+    flat = nz.reshape(K, tile * tile).astype(np.uint64)
+    padded = np.zeros((K, W * 64), np.uint64)
+    padded[:, :tile * tile] = flat
+    weights = np.uint64(1) << np.arange(64, dtype=np.uint64)
+    return (padded.reshape(K, W, 64) * weights).sum(axis=2, dtype=np.uint64)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,7 +82,8 @@ class OctileSet:
       n_tiles_side: number of tile rows (= cols) of the padded matrix.
       coords: [K, 2] int32 (tile_row, tile_col) of non-empty tiles, sorted
         row-major.
-      bitmaps: [K] uint64 occupancy bitmap per tile.
+      bitmaps: [K, W] uint64 occupancy bitmap words per tile
+        (W = ceil(t^2 / 64); one word for the paper's t = 8).
       values_adj: [K, t, t] float32 dense tile values of the adjacency.
       values_lab: [K, t, t] float32 dense tile values of the edge labels.
       nnz: total nonzero element count.
@@ -63,7 +106,7 @@ class OctileSet:
         """Mean within-tile occupancy of the non-empty tiles."""
         if self.n_nonempty == 0:
             return 0.0
-        pop = np.array([bin(int(b)).count("1") for b in self.bitmaps])
+        pop = bitmap_popcounts(self.bitmaps)
         return float(pop.mean()) / (self.tile * self.tile)
 
     def padded(self, max_tiles: int) -> "OctileSet":
@@ -72,13 +115,16 @@ class OctileSet:
         if max_tiles < K:
             raise ValueError(f"max_tiles={max_tiles} < {K}")
         pad = max_tiles - K
+        W = self.bitmaps.shape[1] if self.bitmaps.ndim == 2 \
+            else bitmap_words(self.tile)
         return OctileSet(
             tile=self.tile,
             n_tiles_side=self.n_tiles_side,
             coords=np.concatenate(
                 [self.coords, np.full((pad, 2), -1, np.int32)]),
-            bitmaps=np.concatenate([self.bitmaps,
-                                    np.zeros((pad,), np.uint64)]),
+            bitmaps=np.concatenate(
+                [self.bitmaps.reshape(K, W),
+                 np.zeros((pad, W), np.uint64)]),
             values_adj=np.concatenate(
                 [self.values_adj,
                  np.zeros((pad, self.tile, self.tile), np.float32)]),
@@ -118,18 +164,11 @@ def octile_decompose(adjacency: np.ndarray,
     vals_a = a4[rows, cols]
     vals_e = e4[rows, cols]
     nz = vals_a != 0
-    # bitmap bit (i*t + j); tiles up to 8x8 fit in a uint64
-    if tile * tile <= 64:
-        weights = (np.uint64(1) << np.arange(tile * tile, dtype=np.uint64))
-        bitmaps = (nz.reshape(-1, tile * tile).astype(np.uint64)
-                   * weights).sum(axis=1, dtype=np.uint64)
-    else:
-        bitmaps = np.zeros((len(rows),), np.uint64)
     return OctileSet(
         tile=tile,
         n_tiles_side=nt,
         coords=np.stack([rows, cols], axis=1).astype(np.int32),
-        bitmaps=bitmaps,
+        bitmaps=_pack_bitmaps(nz, tile),
         values_adj=vals_a.astype(np.float32),
         values_lab=vals_e.astype(np.float32),
         nnz=int(nz.sum()),
@@ -156,13 +195,18 @@ def tile_occupancy_histogram(adjacency: np.ndarray,
 
 
 def expand_octiles(oset: OctileSet) -> tuple[np.ndarray, np.ndarray]:
-    """Reconstruct the dense padded (adjacency, labels) from an OctileSet."""
-    n = oset.n_tiles_side * oset.tile
-    a = np.zeros((n, n), np.float32)
-    e = np.zeros((n, n), np.float32)
-    t = oset.tile
-    for k in range(oset.n_nonempty):
-        r, c = oset.coords[k]
-        a[r * t:(r + 1) * t, c * t:(c + 1) * t] = oset.values_adj[k]
-        e[r * t:(r + 1) * t, c * t:(c + 1) * t] = oset.values_lab[k]
+    """Reconstruct the dense padded (adjacency, labels) from an OctileSet.
+
+    Vectorized scatter into the [nt, nt, t, t] view (coords are unique, so
+    fancy-index assignment is exact — no per-tile Python loop).
+    """
+    t, nt = oset.tile, oset.n_tiles_side
+    a4 = np.zeros((nt, nt, t, t), np.float32)
+    e4 = np.zeros((nt, nt, t, t), np.float32)
+    real = oset.coords[:, 0] >= 0       # skip padded() slots
+    rows, cols = oset.coords[real, 0], oset.coords[real, 1]
+    a4[rows, cols] = oset.values_adj[real]
+    e4[rows, cols] = oset.values_lab[real]
+    a = a4.transpose(0, 2, 1, 3).reshape(nt * t, nt * t)
+    e = e4.transpose(0, 2, 1, 3).reshape(nt * t, nt * t)
     return a, e

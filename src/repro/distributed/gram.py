@@ -33,7 +33,98 @@ from .checkpoint import ChunkStore
 from .scheduler import SchedulePlan, make_plan, replan
 
 __all__ = ["gram_pair_step", "solve_pair_block", "GramDriver",
-           "pair_shardings"]
+           "GraphPackCache", "pair_shardings"]
+
+
+class GraphPackCache:
+    """Per-graph row-panel pack cache for the all-pairs driver.
+
+    A graph appears in O(N) pair blocks of the Gram matrix; without a
+    cache it is octile-decomposed and repacked every time its bucket
+    shows up (``row_panel_packs_for_batch`` per block). Here each graph
+    is decomposed ONCE per (dataset index, pad_to) — keyed by dataset
+    index, not array contents — and stored as host arrays at its natural
+    slot count; per-block stacking is then a cheap pad-and-stack to the
+    block's shared k_max.
+
+    ``edge_kernel`` (feature-expandable) additionally precomputes the MXU
+    contraction operands into the cached packs. ``max_entries`` bounds
+    host memory with LRU eviction — the scheduler emits blocks
+    bucket-contiguously, so even a bound far below the dataset size keeps
+    the reuse (a graph's blocks are temporally close).
+    """
+
+    def __init__(self, tile: int = 8, edge_kernel=None,
+                 max_entries: int = 65536):
+        import collections
+        self.tile = tile
+        self.edge_kernel = edge_kernel
+        self.max_entries = max_entries
+        self._packs: "collections.OrderedDict" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def _pack(self, idx, adjacency, labels, pad_to) -> dict:
+        from repro.core.octile import octile_decompose
+        from repro.kernels.xmv_block_sparse import pack_row_panels
+        key = (int(idx), int(pad_to))
+        hit = self._packs.get(key)
+        if hit is not None:
+            self.hits += 1
+            self._packs.move_to_end(key)
+            return hit
+        self.misses += 1
+        while len(self._packs) >= self.max_entries:
+            self._packs.popitem(last=False)
+        oset = octile_decompose(adjacency, labels, tile=self.tile)
+        # as_numpy: the cache re-pads and stacks host-side; the single
+        # device transfer happens in stacked()
+        p = pack_row_panels(oset, edge_kernel=self.edge_kernel,
+                            as_numpy=True)
+        entry = {f: getattr(p, f) for f in type(p)._fields}
+        self._packs[key] = entry
+        return entry
+
+    @staticmethod
+    def _pad_k(arr: np.ndarray, k_max: int) -> np.ndarray:
+        k = arr.shape[1]
+        if k == k_max:
+            return arr
+        pad = [(0, 0)] * arr.ndim
+        pad[1] = (0, k_max - k)
+        return np.pad(arr, pad)
+
+    def stacked(self, indices, batch: GraphBatch):
+        """Build the stacked RowPanelPack for one (padded) pair batch.
+
+        ``indices[b]`` is the dataset index of ``batch`` entry b; entries
+        beyond ``len(indices)`` are data-parallel dummy pairs (cached
+        under index -1 — their adjacency is all zero)."""
+        from repro.kernels.xmv_block_sparse import RowPanelPack
+        B = batch.adjacency.shape[0]
+        pad_to = batch.adjacency.shape[1]
+        if pad_to % self.tile:
+            raise ValueError(
+                f"bucket padded to {pad_to}, not a multiple of"
+                f" tile={self.tile}; pad buckets to a multiple of the"
+                f" tile edge (loader multiple_of)")
+        entries = []
+        for b in range(B):
+            idx = int(indices[b]) if b < len(indices) else -1
+            entries.append(self._pack(idx, np.asarray(batch.adjacency[b]),
+                                      np.asarray(batch.edge_labels[b]),
+                                      pad_to))
+        k_max = max(e["col"].shape[1] for e in entries)
+
+        def stack(field):
+            if entries[0][field] is None:
+                return None
+            if field == "count":
+                return jnp.asarray(np.stack([e[field] for e in entries]))
+            return jnp.asarray(np.stack(
+                [self._pad_k(e[field], k_max) for e in entries]))
+
+        return RowPanelPack(**{f: stack(f) for f in RowPanelPack._fields})
 
 
 def pair_shardings(mesh: Mesh) -> tuple:
@@ -79,7 +170,9 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
                    edge_kernel: BaseKernel, *, method: str = "lowrank",
                    tol: float = 1e-8, max_iter: int = 256,
                    fixed_iters: int | None = None,
-                   pcg_variant: str = "classic") -> Callable:
+                   pcg_variant: str = "classic",
+                   sparse_mode: str = "auto",
+                   tile: int = 8) -> Callable:
     """Build the pair-solve step for a mesh.
 
     ``pcg_variant="pipelined"`` halves the per-iteration all-reduce rounds
@@ -89,21 +182,59 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
     static roofline).
 
     ``method="pallas_sparse"`` returns a host-driven step: the octile
-    TilePacks are built on the host per block (they are per-graph index
-    structures, not shardable tensors), then the whole bucket solves in
-    one batched-grid kernel launch per CG matvec."""
+    row-panel packs are per-graph index structures (not shardable
+    tensors), served from a :class:`GraphPackCache` keyed by dataset
+    index so each graph is decomposed once per bucket size instead of
+    once per pair block; the whole bucket then solves in one row-panel
+    kernel launch per CG matvec. ``sparse_mode`` "auto" uses the MXU
+    contraction whenever ``edge_kernel`` has a feature expansion;
+    ``tile`` sets the octile edge (buckets must pad to a multiple).
+    The step accepts optional ``rows``/``cols`` dataset indices (the
+    driver passes them; without them the packs are built uncached)."""
     if method == "pallas_sparse":
-        from repro.kernels.ops import packs_for_batch
+        from repro.kernels.ops import row_panel_packs_for_batch
 
-        def sparse_step(g1: GraphBatch, g2: GraphBatch) -> MGKResult:
-            res = mgk_pairs_sparse(g1, g2, packs_for_batch(g1),
-                                   packs_for_batch(g2), vertex_kernel,
-                                   edge_kernel, tol=tol, max_iter=max_iter,
+        expand = edge_kernel.feature_rank() is not None and \
+            sparse_mode in ("auto", "mxu")
+        if sparse_mode == "mxu" and not expand:
+            raise ValueError(
+                f"sparse_mode='mxu' needs a feature-expandable edge"
+                f" kernel, got {type(edge_kernel).__name__}")
+        ek_pack = edge_kernel if expand else None
+        mode = "mxu" if expand else "elementwise"
+        # the expansion's accuracy domain (SE Taylor truncation): under
+        # "auto", blocks whose labels leave it run exact elementwise —
+        # same guard as mgk_adaptive; explicit "mxu" is honored as given
+        domain = getattr(edge_kernel, "domain", None) \
+            if sparse_mode == "auto" else None
+        cache = GraphPackCache(tile=tile, edge_kernel=ek_pack)
+
+        def sparse_step(g1: GraphBatch, g2: GraphBatch,
+                        rows=None, cols=None) -> MGKResult:
+            block_mode = mode
+            if mode == "mxu" and domain is not None:
+                lmax = max(float(np.abs(np.asarray(g1.edge_labels)).max()),
+                           float(np.abs(np.asarray(g2.edge_labels)).max()))
+                if lmax > domain:
+                    block_mode = "elementwise"
+            if rows is None or cols is None:
+                p1 = row_panel_packs_for_batch(g1, tile=tile,
+                                               edge_kernel=ek_pack)
+                p2 = row_panel_packs_for_batch(g2, tile=tile,
+                                               edge_kernel=ek_pack)
+            else:
+                p1 = cache.stacked(rows, g1)
+                p2 = cache.stacked(cols, g2)
+            res = mgk_pairs_sparse(g1, g2, p1, p2, vertex_kernel,
+                                   edge_kernel, sparse_mode=block_mode,
+                                   tol=tol, max_iter=max_iter,
                                    fixed_iters=fixed_iters,
                                    pcg_variant=pcg_variant)
             return MGKResult(values=res.values, iterations=res.iterations,
                              converged=res.converged, nodal=None)
 
+        sparse_step.pack_cache = cache
+        sparse_step.wants_indices = True
         return sparse_step
 
     (g1_s, g2_s), out_s = pair_shardings(mesh)
@@ -149,7 +280,13 @@ def solve_pair_block(ds: BucketedDataset, block: PairBlock, step: Callable,
     g2 = ds.batch(block.cols, pad_to=block.pad_col)
     B = block.n_pairs
     to = -(-B // pair_width) * pair_width
-    res = step(_pad_batch(g1, to), _pad_batch(g2, to))
+    if getattr(step, "wants_indices", False):
+        # pack-caching sparse step: keyed by dataset index (dummy pairs
+        # appended by _pad_batch key as -1 inside the cache)
+        res = step(_pad_batch(g1, to), _pad_batch(g2, to),
+                   rows=block.rows, cols=block.cols)
+    else:
+        res = step(_pad_batch(g1, to), _pad_batch(g2, to))
     return {
         "rows": np.asarray(block.rows),
         "cols": np.asarray(block.cols),
@@ -176,6 +313,8 @@ class GramDriver:
     max_iter: int = 256
     fixed_iters: int | None = None
     pcg_variant: str = "classic"
+    sparse_mode: str = "auto"     # pallas_sparse: "auto" | "mxu" | ...
+    tile: int = 8                 # octile edge for the sparse path
     pairs_per_block: int = 64
     normalize: bool = True
 
@@ -203,7 +342,9 @@ class GramDriver:
                               self.edge_kernel, method=self.method,
                               tol=self.tol, max_iter=self.max_iter,
                               fixed_iters=self.fixed_iters,
-                              pcg_variant=self.pcg_variant)
+                              pcg_variant=self.pcg_variant,
+                              sparse_mode=self.sparse_mode,
+                              tile=self.tile)
         blocks = self.blocks()
         by_id = {b.block_id: b for b in blocks}
         done = self.store.done_blocks() if self.store else set()

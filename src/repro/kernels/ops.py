@@ -10,14 +10,19 @@ import jax.numpy as jnp
 
 from .flash_attention import flash_attention
 from .ref import attention_ref, xmv_batched_ref, xmv_ref
-from .xmv_block_sparse import TilePack, pack_graph, pack_octiles, \
-    xmv_block_sparse, xmv_block_sparse_batched
+from .xmv_block_sparse import RowPanelPack, TilePack, pack_graph, \
+    pack_graph_row_panels, pack_octiles, pack_row_panels, \
+    xmv_block_sparse, xmv_block_sparse_batched, xmv_row_panel, \
+    xmv_row_panel_batched
 from .xmv_dense import pick_tiles, xmv_dense, xmv_dense_batched
 
 __all__ = [
     "xmv_dense", "xmv_dense_batched", "xmv_block_sparse",
     "xmv_block_sparse_batched", "xmv_block_sparse_unrolled", "stack_packs",
-    "pack_graph", "pack_octiles", "TilePack", "flash_attention",
+    "pack_graph", "pack_octiles", "TilePack", "RowPanelPack",
+    "pack_row_panels", "pack_graph_row_panels", "xmv_row_panel",
+    "xmv_row_panel_batched", "stack_row_panel_packs",
+    "row_panel_packs_for_batch", "flash_attention",
     "attention_ref", "xmv_ref", "xmv_batched_ref", "pick_tiles",
 ]
 
@@ -28,20 +33,64 @@ def stack_packs(packs: list[TilePack]) -> TilePack:
                       for f in TilePack._fields))
 
 
-def packs_for_batch(batch, tile: int = 8) -> TilePack:
-    """Host-side: octile-decompose every graph of a GraphBatch and stack
-    the packs to shared shapes (pads tile counts to the bucket max)."""
+def stack_row_panel_packs(packs: list[RowPanelPack]) -> RowPanelPack:
+    """Stack per-pair RowPanelPacks (same bucket => same shapes) to
+    [B, ...]; ``values_w`` must be present in all packs or in none."""
+    ws = [p.values_w for p in packs]
+    if any(w is None for w in ws):
+        if not all(w is None for w in ws):
+            raise ValueError("cannot stack packs mixing values_w and None")
+        vw = None
+    else:
+        vw = jnp.stack(ws)
+    return RowPanelPack(
+        values_adj=jnp.stack([p.values_adj for p in packs]),
+        values_lab=jnp.stack([p.values_lab for p in packs]),
+        values_w=vw,
+        col=jnp.stack([p.col for p in packs]),
+        count=jnp.stack([p.count for p in packs]))
+
+
+def _bucket_osets(batch, tile: int):
     import numpy as np
     from repro.core.octile import octile_decompose
+    n = batch.adjacency.shape[1]
+    if n % tile:
+        raise ValueError(
+            f"batch padded to {n}, not a multiple of tile={tile}; pad the"
+            f" bucket to a multiple of the tile edge")
     B = batch.adjacency.shape[0]
-    osets = [octile_decompose(np.asarray(batch.adjacency[b]),
-                              np.asarray(batch.edge_labels[b]), tile=tile)
-             for b in range(B)]
+    return [octile_decompose(np.asarray(batch.adjacency[b]),
+                             np.asarray(batch.edge_labels[b]), tile=tile)
+            for b in range(B)]
+
+
+def packs_for_batch(batch, tile: int = 8) -> TilePack:
+    """Host-side: octile-decompose every graph of a GraphBatch and stack
+    the legacy TilePacks to shared shapes (pads tile counts to the bucket
+    max)."""
+    import numpy as np
+    osets = _bucket_osets(batch, tile)
     K = max(max(o.n_nonempty for o in osets), 1)
     k_max = max(max((np.bincount(o.coords[:, 0]).max(initial=0)
                      if o.n_nonempty else 0) for o in osets), 1)
     return stack_packs([pack_octiles(o.padded(K), k_max=int(k_max))
                         for o in osets])
+
+
+def row_panel_packs_for_batch(batch, tile: int = 8,
+                              edge_kernel=None) -> RowPanelPack:
+    """Host-side: octile-decompose every graph of a GraphBatch into
+    row-panel packs stacked to shared shapes (slot counts padded to the
+    bucket max). Pass ``edge_kernel`` with a feature expansion to also
+    precompute the MXU contraction operands (``values_w``)."""
+    import numpy as np
+    osets = _bucket_osets(batch, tile)
+    k_max = max(max((np.bincount(o.coords[:, 0]).max(initial=0)
+                     if o.n_nonempty else 0) for o in osets), 1)
+    return stack_row_panel_packs(
+        [pack_row_panels(o, edge_kernel=edge_kernel, k_max=int(k_max))
+         for o in osets])
 
 
 def xmv_block_sparse_unrolled(packs1: TilePack, packs2: TilePack, P,

@@ -2,32 +2,50 @@
 
 The TPU port of the paper's inter-tile sparsity exploitation (Sec. IV-A):
 only non-empty octiles participate. The CUDA kernel streams a COO tile list
-per warp and resolves output collisions with atomics; TPUs have neither
+per warp, stages the streamed tiles in *shared memory* so every warp lane
+reuses them, and resolves output collisions with atomics; TPUs have neither
 warps nor atomics, so (DESIGN.md §2):
 
-* the COO list is re-bucketed BY TILE ROW at preprocessing time
-  (``pack_octiles``), padded to the max tiles-per-row with pointers to a
-  designated all-zero tile — zero contributions instead of control flow;
-* the grid iterates (tile_row_i, tile_row_i', slot, slot'); the output
-  block (i, i') is constant over the two inner reduction dims, so
-  accumulation is race-free by construction (no atomics needed);
-* the *dynamic* tile indirection uses scalar prefetch
-  (PrefetchScalarGridSpec): the slot/column index arrays are prefetched to
-  SMEM and drive the BlockSpec index_maps — the TPU-idiomatic equivalent of
-  the warp reading COO coordinates.
+* the COO list is re-bucketed BY TILE ROW at preprocessing time into
+  contiguous **row panels** (``pack_row_panels``) — the whole tile row
+  (values + columns) lands in VMEM as ONE pipelined block fetch and is
+  reused across every slot pair of the output block, the TPU analog of
+  the paper's warp-shared tiles;
+* the grid is (pair, tile_row_i, tile_row_i'): each output block is
+  owned by exactly one grid step, so accumulation is race-free by
+  construction (no atomics needed) and the (slot, slot') reduction runs
+  as an in-kernel ``fori_loop`` whose trip counts are the row's *actual*
+  slot counts, prefetched to SMEM — padding slots cost a skipped loop
+  iteration, not a full grid step (the warp's COO cursor, DESIGN.md §3);
+* the *dynamic* tile-column indirection uses scalar prefetch
+  (PrefetchScalarGridSpec): the column/count arrays are prefetched to
+  SMEM and drive dynamic P-block loads inside the kernel.
 
-Two launch granularities (DESIGN.md §3):
+Two compute modes per octile pair (paper Sec. IV-B's density-adaptive
+primitive choice, re-targeted to the TPU's two compute units):
 
-* :func:`xmv_block_sparse` — one pair per ``pallas_call``;
-* :func:`xmv_block_sparse_batched` — a whole bucket of pairs per
-  ``pallas_call``: the pair axis is folded into the grid as its leading
-  (outermost) dimension and the prefetched index arrays carry a [B]
-  axis, so one launch sweeps every pair (the paper Sec. V "many pairs
-  per kernel launch", without B separate dispatches).
+* **elementwise (VPU)** — regenerate the [t, t, t, t] product-weight
+  block from ``kappa_e`` and contract on the vector unit; works for any
+  edge kernel.
+* **MXU low-rank contraction** — for edge kernels with a feature
+  expansion ``kappa(x, y) = sum_r f_r(x) f_r(y)``, the pack precomputes
+  per-octile weighted tiles ``w_r = a ∘ f_r(e)`` and each octile pair
+  contracts as ``sum_r w_r @ P_blk @ w'_r^T`` — small matmuls on the
+  systolic array instead of a t^4 broadcast tensor, which is also what
+  makes tile sizes t ∈ {8, 16, 32} worthwhile (t = 32 feeds the MXU
+  with 32x32 operands; the VPU path scales as t^4).
 
-Both support a **fused diagonal epilogue**: pass ``diag = D_x V_x^{-1}``
-(reshaped [n, m] / [B, n, m]) and the kernel emits the full CG operator
-application ``diag * p - y`` in the output block's final grid step —
+Legacy launch granularities kept as benchmark baselines (DESIGN.md §3):
+
+* :func:`xmv_block_sparse` — one pair per ``pallas_call``, unrolled
+  (nt, mt, ka, kb) grid;
+* :func:`xmv_block_sparse_batched` — whole bucket per ``pallas_call``,
+  (B, nt, mt, ka, kb) grid: every (slot, slot') pair is a separate grid
+  step that re-fetches its octiles.
+
+All entry points support a **fused diagonal epilogue**: pass
+``diag = D_x V_x^{-1}`` (reshaped [n, m] / [B, n, m]) and the kernel emits
+the full CG operator application ``diag * p - y`` in the output block —
 no extra XLA op or HBM round-trip per CG iteration (DESIGN.md §3).
 
 Intra-tile sparsity (Sec. IV-B, bitmap compaction) lives at the storage
@@ -50,7 +68,9 @@ import jax.experimental.pallas.tpu as pltpu
 from repro.core.octile import OctileSet, octile_decompose
 
 __all__ = ["TilePack", "pack_octiles", "xmv_block_sparse",
-           "xmv_block_sparse_batched"]
+           "xmv_block_sparse_batched", "RowPanelPack", "pack_row_panels",
+           "pack_graph_row_panels", "xmv_row_panel",
+           "xmv_row_panel_batched"]
 
 
 class TilePack(NamedTuple):
@@ -62,7 +82,9 @@ class TilePack(NamedTuple):
     col:  [n_tile_rows, k_max] int32 tile-column (P block index).
 
     Stacked packs (``ops.stack_packs``) carry a leading [B] axis on every
-    field and feed :func:`xmv_block_sparse_batched`.
+    field and feed :func:`xmv_block_sparse_batched`. This is the storage
+    of the *legacy* unrolled-grid kernels; the row-panel kernels read the
+    contiguous :class:`RowPanelPack` layout instead.
     """
     values_adj: jnp.ndarray
     values_lab: jnp.ndarray
@@ -78,26 +100,88 @@ class TilePack(NamedTuple):
         return self.slot.shape[-2]
 
 
+class RowPanelPack(NamedTuple):
+    """Row-panel octile storage for one graph: tiles contiguous per row.
+
+    values_adj/values_lab: [nt, k_max, t, t]; row i's real tiles occupy
+      slots [0, count[i]) in COO column order, the rest are zero.
+    values_w: [nt, k_max, R, t, t] precomputed MXU operands
+      ``w_r = a ∘ f_r(e)`` when the pack was built with a
+      feature-expandable edge kernel, else None.
+    col:   [nt, k_max] int32 tile-column (P block index) per slot.
+    count: [nt] int32 *actual* tiles in each row (the SMEM loop bound).
+
+    Stacked packs (``ops.stack_row_panel_packs``) carry a leading [B]
+    axis on every field and feed :func:`xmv_row_panel_batched`. Unlike
+    :class:`TilePack` there is no slot indirection: the panel layout IS
+    the schedule, so the Pallas pipeline stages a whole tile row into
+    VMEM as one block and the kernel reuses it across all slot pairs.
+
+    VMEM envelope: the row-panel kernels also keep the pair's whole P
+    panel resident (4*n*m bytes, fetched once per pair and reused by
+    every output block), plus the two row panels
+    (4*k_max*(2 or R)*t^2 bytes each). Graph-kernel buckets are far
+    below the ~16 MB/core budget (n = m = 512 => 1 MB for P); buckets
+    beyond n*m ~ 2M elements should fall back to the legacy
+    :func:`xmv_block_sparse_batched`, whose P BlockSpec streams t x t
+    blocks via prefetch-indexed maps instead.
+    """
+    values_adj: jnp.ndarray
+    values_lab: jnp.ndarray
+    values_w: jnp.ndarray | None
+    col: jnp.ndarray
+    count: jnp.ndarray
+
+    @property
+    def tile(self) -> int:
+        return self.values_adj.shape[-1]
+
+    @property
+    def n_tile_rows(self) -> int:
+        return self.col.shape[-2]
+
+    @property
+    def k_max(self) -> int:
+        return self.col.shape[-1]
+
+    @property
+    def rank(self) -> int | None:
+        return None if self.values_w is None else self.values_w.shape[-3]
+
+
+def _row_positions(rows: np.ndarray, nt: int) -> tuple[np.ndarray,
+                                                       np.ndarray]:
+    """Per-row slot position of each (row-major sorted) COO entry.
+
+    Returns (counts[nt], pos[K]); vectorized replacement for the
+    per-tile Python fill loop (runs once per graph per Gram block).
+    """
+    K = rows.shape[0]
+    counts = np.bincount(rows, minlength=nt) if K else np.zeros(nt,
+                                                                np.int64)
+    starts = np.zeros(nt + 1, np.int64)
+    starts[1:] = np.cumsum(counts)
+    pos = np.arange(K, dtype=np.int64) - starts[rows]
+    return counts, pos
+
+
 def pack_octiles(oset: OctileSet, k_max: int | None = None) -> TilePack:
     """Host-side: bucket an OctileSet's COO list by tile row."""
     t, nt = oset.tile, oset.n_tiles_side
     K_total = oset.coords.shape[0]       # includes padded() slots, if any
     real = oset.coords[:, 0] >= 0        # padded() marks pad slots with -1
     K = int(real.sum())
-    rows = oset.coords[:K, 0]
-    counts = np.bincount(rows, minlength=nt) if K else np.zeros(nt, np.int64)
+    rows = oset.coords[:K, 0].astype(np.int64)
+    cols = oset.coords[:K, 1]
+    counts, pos = _row_positions(rows, nt)
     if k_max is None:
         k_max = max(int(counts.max(initial=0)), 1)
     elif counts.max(initial=0) > k_max:
         raise ValueError(f"k_max={k_max} < max tiles per row {counts.max()}")
     slot = np.full((nt, k_max), K_total, np.int32)   # K_total = zero tile
     col = np.zeros((nt, k_max), np.int32)
-    fill = np.zeros(nt, np.int64)
-    for k in range(K):
-        r, c = oset.coords[k]
-        slot[r, fill[r]] = k
-        col[r, fill[r]] = c
-        fill[r] += 1
+    slot[rows, pos] = np.arange(K, dtype=np.int32)
+    col[rows, pos] = cols
     vals_a = np.concatenate(
         [oset.values_adj, np.zeros((1, t, t), np.float32)], axis=0)
     vals_e = np.concatenate(
@@ -105,6 +189,55 @@ def pack_octiles(oset: OctileSet, k_max: int | None = None) -> TilePack:
     return TilePack(values_adj=jnp.asarray(vals_a),
                     values_lab=jnp.asarray(vals_e),
                     slot=jnp.asarray(slot), col=jnp.asarray(col))
+
+
+def pack_row_panels(oset: OctileSet, edge_kernel=None,
+                    k_max: int | None = None,
+                    as_numpy: bool = False) -> RowPanelPack:
+    """Host-side: lay an OctileSet out as contiguous VMEM-ready row panels.
+
+    With ``edge_kernel`` carrying a feature expansion
+    (``feature_rank() is not None``), the pack also precomputes the MXU
+    operands ``w_r = a ∘ f_r(e)`` per octile — loop-invariant across the
+    whole CG solve, so weighting at pack time amortizes it over every
+    matvec (the same trade the dense low-rank path makes in
+    ``core/mgk.py``).
+
+    ``as_numpy`` keeps the fields as host arrays (for caching layers that
+    re-pad and stack before the single device transfer).
+    """
+    t, nt = oset.tile, oset.n_tiles_side
+    real = oset.coords[:, 0] >= 0
+    rows = oset.coords[real, 0].astype(np.int64)
+    cols = oset.coords[real, 1]
+    vals_a = oset.values_adj[real]
+    vals_e = oset.values_lab[real]
+    counts, pos = _row_positions(rows, nt)
+    if k_max is None:
+        k_max = max(int(counts.max(initial=0)), 1)
+    elif counts.max(initial=0) > k_max:
+        raise ValueError(f"k_max={k_max} < max tiles per row {counts.max()}")
+    va = np.zeros((nt, k_max, t, t), np.float32)
+    ve = np.zeros((nt, k_max, t, t), np.float32)
+    col = np.zeros((nt, k_max), np.int32)
+    va[rows, pos] = vals_a
+    ve[rows, pos] = vals_e
+    col[rows, pos] = cols
+    vw = None
+    if edge_kernel is not None and edge_kernel.feature_rank() is not None:
+        phi = np.asarray(edge_kernel.features(vals_e))     # [K, t, t, R]
+        w = vals_a[..., None] * phi
+        R = w.shape[-1]
+        vw_np = np.zeros((nt, k_max, t, t, R), np.float32)
+        vw_np[rows, pos] = w
+        vw = np.ascontiguousarray(
+            vw_np.transpose(0, 1, 4, 2, 3))                # [nt, k, R, t, t]
+    dev = (lambda x: x) if as_numpy else jnp.asarray
+    return RowPanelPack(values_adj=dev(va),
+                        values_lab=dev(ve),
+                        values_w=None if vw is None else dev(vw),
+                        col=dev(col),
+                        count=dev(counts.astype(np.int32)))
 
 
 def pack_graph(adjacency, edge_labels=None, tile: int = 8,
@@ -116,6 +249,17 @@ def pack_graph(adjacency, edge_labels=None, tile: int = 8,
                                          tile=tile), k_max=k_max)
 
 
+def pack_graph_row_panels(adjacency, edge_labels=None, tile: int = 8,
+                          edge_kernel=None,
+                          k_max: int | None = None) -> RowPanelPack:
+    """Convenience: dense matrix -> RowPanelPack."""
+    return pack_row_panels(
+        octile_decompose(np.asarray(adjacency),
+                         None if edge_labels is None
+                         else np.asarray(edge_labels), tile=tile),
+        edge_kernel=edge_kernel, k_max=k_max)
+
+
 def _contrib(a, e, ap, ep, p, edge_kernel, acc_dtype):
     """One octile-pair contribution: contract the regenerated [t,t,t,t]
     product-weight block with the [t, t] P block -> [t, t]."""
@@ -125,13 +269,256 @@ def _contrib(a, e, ap, ep, p, edge_kernel, acc_dtype):
     return jnp.sum(w * p[None, :, None, :], axis=(1, 3))
 
 
+def _mxu_contrib(w, wp, p, acc_dtype):
+    """One octile-pair contribution on the MXU: sum_r w_r @ P @ w'_r^T.
+
+    w/wp: [R, t, t] pre-weighted tiles ``a ∘ f_r(e)``; p: [t, t].
+    Two rank-batched matmuls replace the t^4 broadcast tensor.
+    """
+    tmp = jax.lax.dot_general(            # [R, t, t]: w_r @ P
+        w, p, (((2,), (0,)), ((), ())), preferred_element_type=acc_dtype)
+    out = jax.lax.dot_general(            # [R, t, t]: (w_r @ P) @ w'_r^T
+        tmp, wp, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=acc_dtype)
+    return jnp.sum(out, axis=0)
+
+
+def _row_panel_kernel(col1, cnt1, col2, cnt2,   # scalar-prefetch refs
+                      *refs, edge_kernel, acc_dtype, fused, mxu, batched,
+                      tile, rank):
+    """Row-panel kernel body: one grid step OWNS output block (i, i').
+
+    Grid layout: (nt, mt) per-pair, (B, nt, mt) batched. Both graphs'
+    whole tile rows are VMEM-resident (one pipelined block fetch each)
+    and reused across all ka x kb slot pairs; the slot reduction is an
+    in-kernel ``fori_loop`` bounded by the rows' SMEM slot counts, so
+    padding slots are never touched. Each output block is written
+    exactly once — no cross-step accumulation, no init/epilogue grid
+    predicates.
+    """
+    t = tile
+    d = 1 if batched else 0
+    i, ip = pl.program_id(d), pl.program_id(d + 1)
+    if mxu:
+        w1_ref, w2_ref, p_ref = refs[:3]
+        rest = refs[3:]
+    else:
+        a1_ref, e1_ref, a2_ref, e2_ref, p_ref = refs[:5]
+        rest = refs[5:]
+    diag_ref, o_ref = (rest if fused else (None, rest[0]))
+
+    if batched:
+        b = pl.program_id(0)
+        na, nb = cnt1[b, i], cnt2[b, ip]
+        col_a = lambda k: col1[b, i, k]      # noqa: E731
+        col_b = lambda k: col2[b, ip, k]     # noqa: E731
+        at = lambda ref, k: ref[0, 0, k]     # noqa: E731
+        atr = lambda ref, k: ref[0, 0, pl.ds(k * rank, rank)]  # noqa: E731
+    else:
+        na, nb = cnt1[i], cnt2[ip]
+        col_a = lambda k: col1[i, k]         # noqa: E731
+        col_b = lambda k: col2[ip, k]        # noqa: E731
+        at = lambda ref, k: ref[0, k]        # noqa: E731
+        atr = lambda ref, k: ref[0, pl.ds(k * rank, rank)]     # noqa: E731
+
+    def p_block(ca, cb):
+        blk = (p_ref[0, pl.ds(ca * t, t), pl.ds(cb * t, t)] if batched
+               else p_ref[pl.ds(ca * t, t), pl.ds(cb * t, t)])
+        return blk.astype(acc_dtype)
+
+    def outer(kk, acc):
+        ca = col_a(kk)
+        if mxu:
+            w = atr(w1_ref, kk)                      # [R, t, t], staged row
+        else:
+            a = at(a1_ref, kk).astype(acc_dtype)
+            e = at(e1_ref, kk)
+
+        def inner(kkp, acc):
+            pblk = p_block(ca, col_b(kkp))
+            if mxu:
+                contrib = _mxu_contrib(w, atr(w2_ref, kkp), pblk, acc_dtype)
+            else:
+                contrib = _contrib(a, e, at(a2_ref, kkp).astype(acc_dtype),
+                                   at(e2_ref, kkp), pblk, edge_kernel,
+                                   acc_dtype)
+            return acc + contrib
+
+        return jax.lax.fori_loop(0, nb, inner, acc)
+
+    acc = jax.lax.fori_loop(0, na, outer,
+                            jnp.zeros((t, t), acc_dtype))
+
+    if fused:
+        # the operator application diag*p - y, with the p block read from
+        # the already-VMEM-resident P panel
+        dblk = (diag_ref[0] if batched else diag_ref[...]).astype(acc_dtype)
+        pout = p_block(i, ip)
+        acc = dblk * pout - acc
+    res = acc.astype(o_ref.dtype)
+    o_ref[...] = res[None] if batched else res
+
+
+def _resolve_mode(mode: str, packs1: RowPanelPack,
+                  packs2: RowPanelPack) -> bool:
+    """Map the mode knob to the mxu flag, validating pack contents."""
+    have_w = packs1.values_w is not None and packs2.values_w is not None
+    if mode == "auto":
+        return have_w
+    if mode == "mxu":
+        if not have_w:
+            raise ValueError(
+                "mode='mxu' needs packs built with a feature-expandable"
+                " edge kernel (pack_row_panels(..., edge_kernel=...))")
+        return True
+    if mode == "elementwise":
+        return False
+    raise ValueError(f"unknown row-panel mode {mode!r}")
+
+
+def _row_panel_call(packs1, packs2, P, edge_kernel, diag, interpret,
+                    acc_dtype, mode, batched):
+    t = packs1.tile
+    nt, mt = packs1.n_tile_rows, packs2.n_tile_rows
+    ka, kb = packs1.k_max, packs2.k_max
+    if batched:
+        B = packs1.col.shape[0]
+        Bp, n, m = P.shape
+        if Bp != B:
+            raise ValueError(f"P batch {Bp} != pack batch {B}")
+    else:
+        n, m = P.shape
+    if n != nt * t or m != mt * t:
+        raise ValueError(f"P shape {P.shape} inconsistent with tile packs"
+                         f" ({nt}x{t}, {mt}x{t})")
+    if packs2.tile != t:
+        raise ValueError(f"tile mismatch: {t} vs {packs2.tile}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fused = diag is not None
+    mxu = _resolve_mode(mode, packs1, packs2)
+    rank = packs1.rank if mxu else 0
+    if mxu and packs2.rank != rank:
+        raise ValueError(
+            f"feature rank mismatch: {rank} vs {packs2.rank}")
+
+    if batched:
+        def panel1(shape):
+            return pl.BlockSpec((1, 1) + shape,
+                                lambda b, i, ip, c1, n1, c2, n2:
+                                (b, i) + (0,) * len(shape))
+
+        def panel2(shape):
+            return pl.BlockSpec((1, 1) + shape,
+                                lambda b, i, ip, c1, n1, c2, n2:
+                                (b, ip) + (0,) * len(shape))
+
+        p_spec = pl.BlockSpec((1, n, m),
+                              lambda b, i, ip, c1, n1, c2, n2: (b, 0, 0))
+        out_spec = pl.BlockSpec((1, t, t),
+                                lambda b, i, ip, c1, n1, c2, n2: (b, i, ip))
+        grid = (B, nt, mt)
+        out_shape = jax.ShapeDtypeStruct((B, n, m), P.dtype)
+    else:
+        def panel1(shape):
+            return pl.BlockSpec((1,) + shape,
+                                lambda i, ip, c1, n1, c2, n2:
+                                (i,) + (0,) * len(shape))
+
+        def panel2(shape):
+            return pl.BlockSpec((1,) + shape,
+                                lambda i, ip, c1, n1, c2, n2:
+                                (ip,) + (0,) * len(shape))
+
+        p_spec = pl.BlockSpec((n, m),
+                              lambda i, ip, c1, n1, c2, n2: (0, 0))
+        out_spec = pl.BlockSpec((t, t),
+                                lambda i, ip, c1, n1, c2, n2: (i, ip))
+        grid = (nt, mt)
+        out_shape = jax.ShapeDtypeStruct((n, m), P.dtype)
+
+    if mxu:
+        # [.., nt, ka, R, t, t] -> [.., nt, ka*R, t, t]: slot-major,
+        # rank-minor, so slot kk's operands are rows [kk*R, (kk+1)*R)
+        w1 = packs1.values_w.reshape(packs1.values_w.shape[:-4]
+                                     + (ka * rank, t, t))
+        w2 = packs2.values_w.reshape(packs2.values_w.shape[:-4]
+                                     + (kb * rank, t, t))
+        in_specs = [panel1((ka * rank, t, t)), panel2((kb * rank, t, t)),
+                    p_spec]
+        inputs = [w1, w2, P]
+    else:
+        in_specs = [panel1((ka, t, t)), panel1((ka, t, t)),
+                    panel2((kb, t, t)), panel2((kb, t, t)), p_spec]
+        inputs = [packs1.values_adj, packs1.values_lab,
+                  packs2.values_adj, packs2.values_lab, P]
+    if fused:
+        in_specs.append(out_spec)
+        inputs.append(diag)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+    )
+    return pl.pallas_call(
+        functools.partial(_row_panel_kernel, edge_kernel=edge_kernel,
+                          acc_dtype=acc_dtype, fused=fused, mxu=mxu,
+                          batched=batched, tile=t, rank=rank),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(packs1.col, packs1.count, packs2.col, packs2.count, *inputs)
+
+
+@functools.partial(jax.jit, static_argnames=("edge_kernel", "interpret",
+                                             "acc_dtype", "mode"))
+def xmv_row_panel(pack1: RowPanelPack, pack2: RowPanelPack, P, edge_kernel,
+                  *, diag=None, mode: str = "auto", interpret=None,
+                  acc_dtype=jnp.float32):
+    """y = (A (x) A' .* E (x)k E') P via VMEM-staged row panels (one pair).
+
+    ``mode``: "elementwise" (VPU, any edge kernel), "mxu" (low-rank
+    contraction; needs packs built with the edge kernel), or "auto"
+    (mxu iff both packs carry precomputed weighted tiles).
+
+    With ``diag`` ([n, m]) the kernel instead returns the fused CG
+    operator application ``diag * P - y``.
+    """
+    return _row_panel_call(pack1, pack2, P, edge_kernel, diag, interpret,
+                           acc_dtype, mode, batched=False)
+
+
+@functools.partial(jax.jit, static_argnames=("edge_kernel", "interpret",
+                                             "acc_dtype", "mode"))
+def xmv_row_panel_batched(packs1: RowPanelPack, packs2: RowPanelPack, P,
+                          edge_kernel, *, diag=None, mode: str = "auto",
+                          interpret=None, acc_dtype=jnp.float32):
+    """Whole-bucket row-panel block-sparse XMV in ONE ``pallas_call``.
+
+    ``packs1``/``packs2`` are stacked RowPanelPacks
+    (``ops.stack_row_panel_packs``) with a leading [B] axis on every
+    field; ``P`` is [B, n, m]. Grid (B, nt, mt): the pair axis is the
+    outermost grid dimension, each output block is owned by one grid
+    step, and the (slot, slot') reduction runs in-kernel over the
+    VMEM-staged tile rows (vs a grid step per slot pair in the legacy
+    :func:`xmv_block_sparse_batched`).
+
+    With ``diag`` ([B, n, m]) the fused epilogue emits ``diag * P - y``.
+    """
+    return _row_panel_call(packs1, packs2, P, edge_kernel, diag, interpret,
+                           acc_dtype, mode, batched=True)
+
+
 def _kernel(slot_a, col_a, slot_b, col_b,   # scalar-prefetch refs
             *refs, edge_kernel, acc_dtype, fused, batched):
-    """Shared kernel body for the per-pair and batched grids.
+    """Legacy unrolled-grid kernel body (per-pair and batched).
 
     Grid layout: (nt, mt, ka, kb) per-pair, (B, nt, mt, ka, kb) batched;
     the two trailing dims are the reduction over octile slots, so the
     output block is revisited consecutively and accumulation is race-free.
+    Kept as the benchmark baseline for the row-panel kernel above.
     """
     d = 1 if batched else 0
     kk, kkp = pl.program_id(2 + d), pl.program_id(3 + d)
@@ -181,6 +568,10 @@ def _kernel(slot_a, col_a, slot_b, col_b,   # scalar-prefetch refs
 def xmv_block_sparse(pack1: TilePack, pack2: TilePack, P, edge_kernel, *,
                      diag=None, interpret=None, acc_dtype=jnp.float32):
     """y = (A (x) A' .* E (x)k E') P using only non-empty octiles.
+
+    Legacy unrolled-grid kernel: every (slot, slot') pair is a full grid
+    step. Superseded by :func:`xmv_row_panel`; kept as the baseline arm
+    of the BENCH_xmv comparison and the parity tests.
 
     With ``diag`` ([n, m]) the kernel instead returns the fused CG operator
     application ``diag * P - y`` (epilogue in the last reduction step).
@@ -245,13 +636,16 @@ def xmv_block_sparse(pack1: TilePack, pack2: TilePack, P, edge_kernel, *,
 def xmv_block_sparse_batched(packs1: TilePack, packs2: TilePack, P,
                              edge_kernel, *, diag=None, interpret=None,
                              acc_dtype=jnp.float32):
-    """Whole-bucket block-sparse XMV in ONE ``pallas_call``.
+    """Whole-bucket block-sparse XMV in ONE ``pallas_call`` (legacy grid).
 
     ``packs1``/``packs2`` are stacked TilePacks (``ops.stack_packs``) with a
     leading [B] axis on every field; ``P`` is [B, n, m]. The pair axis is
     the outermost grid dimension and the scalar-prefetch index maps select
     per-pair tiles via ``slot[b, i, k]`` — replacing B dispatches (and B
-    jit boundaries) per CG iteration with one (paper Sec. V).
+    jit boundaries) per CG iteration with one (paper Sec. V). Every
+    (slot, slot') pair is still a separate grid step that re-fetches its
+    octiles; :func:`xmv_row_panel_batched` removes that too. Kept as the
+    benchmark baseline.
 
     With ``diag`` ([B, n, m]) the fused epilogue emits ``diag * P - y``.
     """

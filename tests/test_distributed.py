@@ -122,6 +122,77 @@ def test_gram_driver_resumes_partial(tmp_path):
     assert not np.isnan(K).any()
 
 
+def test_sparse_step_caches_packs_per_graph(monkeypatch):
+    """A graph appearing in many pair blocks must be octile-decomposed
+    once per bucket size, not once per block (the GraphPackCache)."""
+    import repro.core.octile as octile_mod
+    from repro.distributed.gram import gram_pair_step, solve_pair_block
+
+    ds = _dataset(8)
+    blocks = list(pair_blocks(ds, pairs_per_block=4))
+    calls = {"n": 0}
+    real_decompose = octile_mod.octile_decompose
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real_decompose(*a, **kw)
+
+    monkeypatch.setattr(octile_mod, "octile_decompose", counting)
+    step = gram_pair_step(_mesh(), VK, EK, method="pallas_sparse")
+    assert getattr(step, "wants_indices", False)
+    outs = [solve_pair_block(ds, b, step, 1) for b in blocks]
+    # every (graph, bucket pad) combination decomposed exactly once, plus
+    # at most one dummy pack per pad size — far below once-per-block
+    distinct = {(int(i), b.pad_row) for b in blocks for i in b.rows} | \
+               {(int(i), b.pad_col) for b in blocks for i in b.cols}
+    assert calls["n"] <= len(distinct) + len(
+        {b.pad_row for b in blocks} | {b.pad_col for b in blocks})
+    assert step.pack_cache.hits > 0
+    # and the cached path computes the same values as the dense reference
+    from repro.distributed.gram import gram_pair_step as gps
+    ref_step = gps(_mesh(), VK, EK, method="lowrank")
+    for b, out in zip(blocks[:2], outs[:2]):
+        ref = solve_pair_block(ds, b, ref_step, 1)
+        np.testing.assert_allclose(out["values"], ref["values"],
+                                   rtol=1e-4)
+
+
+def test_sparse_step_domain_guard_falls_back_to_elementwise():
+    """sparse_mode='auto' must not use the Taylor expansion outside its
+    accuracy domain — the block falls back to exact elementwise (the
+    mgk_adaptive guard, applied per pair block)."""
+    from repro.distributed.gram import gram_pair_step, solve_pair_block
+    ds = _dataset(6)
+    blocks = list(pair_blocks(ds, pairs_per_block=6))
+    ek = SquareExponential(1.0, rank=10, domain=0.0)   # always out of domain
+    step = gram_pair_step(_mesh(), VK, ek, method="pallas_sparse")
+    out = solve_pair_block(ds, blocks[0], step, 1)
+    ref_step = gram_pair_step(_mesh(), VK, ek, method="elementwise")
+    ref = solve_pair_block(ds, blocks[0], ref_step, 1)
+    np.testing.assert_allclose(out["values"], ref["values"], rtol=1e-4)
+
+
+def test_pack_cache_rejects_non_multiple_tile():
+    from repro.distributed.gram import GraphPackCache
+    from repro.core.graph import batch_from_graphs
+    gs = [g for g in make_drugbank_like_dataset(8, seed=1)
+          if 6 <= g.n_nodes <= 24][:2]
+    batch = batch_from_graphs(gs, pad_to=24)       # 24 % 16 != 0
+    cache = GraphPackCache(tile=16)
+    with pytest.raises(ValueError, match="multiple of"):
+        cache.stacked(np.array([0, 1]), batch)
+
+
+def test_gram_driver_sparse_matches_lowrank():
+    ds = _dataset(6)
+    drv_s = GramDriver(ds, _mesh(), VK, EK, method="pallas_sparse",
+                       pairs_per_block=6)
+    drv_l = GramDriver(ds, _mesh(), VK, EK, method="lowrank",
+                       pairs_per_block=6)
+    np.testing.assert_allclose(drv_s.run(), drv_l.run(), rtol=1e-4,
+                               atol=1e-6)
+
+
 def test_array_checkpoint_roundtrip_and_fallback(tmp_path):
     tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
             "b": (np.ones(4), np.zeros(2))}

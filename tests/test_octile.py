@@ -1,8 +1,10 @@
-"""Octile decomposition: roundtrip, bitmap correctness, counting."""
+"""Octile decomposition: roundtrip, multi-word bitmap correctness,
+counting, and the vectorized host-side hot spots."""
 import numpy as np
 from _hypothesis_compat import given, settings, st
 
-from repro.core.octile import (count_nonempty_tiles, expand_octiles,
+from repro.core.octile import (bitmap_popcounts, bitmap_words,
+                               count_nonempty_tiles, expand_octiles,
                                octile_decompose, tile_occupancy_histogram)
 
 
@@ -22,11 +24,48 @@ def test_roundtrip(rng):
     assert np.allclose(e2[:37, :37], e)
 
 
+def test_roundtrip_padded(rng):
+    """expand_octiles must skip the -1 coords that padded() appends."""
+    a, e = _sparse(rng, 40, 0.1)
+    oset = octile_decompose(a, e).padded(80)
+    a2, e2 = expand_octiles(oset)
+    assert np.allclose(a2[:40, :40], a)
+    assert np.allclose(e2[:40, :40], e)
+
+
 def test_bitmap_popcount_equals_nnz(rng):
     a, e = _sparse(rng, 64, 0.07)
     oset = octile_decompose(a, e)
-    pop = sum(bin(int(b)).count("1") for b in oset.bitmaps)
-    assert pop == oset.nnz == np.count_nonzero(a)
+    assert oset.bitmaps.shape == (oset.n_nonempty, 1)   # t=8: one word
+    assert bitmap_popcounts(oset.bitmaps).sum() == oset.nnz \
+        == np.count_nonzero(a)
+
+
+def test_multiword_bitmap_popcount_equals_nnz(rng):
+    """t = 16 and t = 32 tiles need 4 and 16 uint64 words respectively."""
+    a, e = _sparse(rng, 96, 0.05)
+    for tile in (16, 32):
+        oset = octile_decompose(a, e, tile=tile)
+        assert bitmap_words(tile) == -(-(tile * tile) // 64)
+        assert oset.bitmaps.shape == (oset.n_nonempty, bitmap_words(tile))
+        assert bitmap_popcounts(oset.bitmaps).sum() == oset.nnz \
+            == np.count_nonzero(a)
+        assert 0.0 < oset.density <= 1.0
+
+
+def test_bitmap_bit_positions(rng):
+    """Bit q = i*t + j of word q // 64 maps exactly to element (i, j)."""
+    for tile in (8, 16):
+        a = np.zeros((tile, tile), np.float32)
+        hits = [(0, 0), (1, 2), (tile - 1, tile - 1)]
+        for i, j in hits:
+            a[i, j] = 1.0
+        oset = octile_decompose(a, tile=tile)
+        assert oset.n_nonempty == 1
+        words = oset.bitmaps[0]
+        for i, j in hits:
+            q = i * tile + j
+            assert (int(words[q // 64]) >> (q % 64)) & 1
 
 
 def test_count_matches_decompose(rng):
@@ -51,6 +90,21 @@ def test_roundtrip_property(n, density, seed):
     oset = octile_decompose(a, e)
     a2, _ = expand_octiles(oset)
     assert np.allclose(a2[:n, :n], a)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 72), density=st.floats(0.0, 0.25),
+       tile=st.sampled_from([16, 32]), seed=st.integers(0, 1000))
+def test_multiword_roundtrip_property(n, density, tile, seed):
+    """Multi-word bitmaps round-trip: octile_decompose -> expand_octiles
+    reconstructs the matrix and popcounts stay consistent for t > 8."""
+    rng = np.random.default_rng(seed)
+    a, e = _sparse(rng, n, density)
+    oset = octile_decompose(a, e, tile=tile)
+    a2, e2 = expand_octiles(oset)
+    assert np.allclose(a2[:n, :n], a)
+    assert np.allclose(e2[:n, :n], e)
+    assert bitmap_popcounts(oset.bitmaps).sum() == np.count_nonzero(a)
 
 
 def test_histogram_total(rng):

@@ -7,23 +7,36 @@ Public surface:
   rcm_order / pbr_order / morton_order / best_order
   pcg_solve                 batched masked preconditioned CG
   mgk_pairs / mgk_single    the marginalized graph kernel
+  mgk_*_value_and_grad      adjoint-solve hyperparameter gradients
 """
+from .adjoint import (flatten_grads, kernel_theta,
+                      mgk_adaptive_value_and_grad,
+                      mgk_pairs_sparse_value_and_grad,
+                      mgk_pairs_value_and_grad, mgk_value_fn)
 from .base_kernels import (BaseKernel, CompactPolynomial, Constant,
-                           KroneckerDelta, SquareExponential)
+                           KroneckerDelta, ParamDerivative,
+                           SquareExponential, pack_theta, unpack_theta)
 from .graph import Graph, GraphBatch, batch_from_graphs, pad_graphs
-from .mgk import MGKResult, ProductSystem, build_product_system, mgk_pairs, \
+from .mgk import MGKResult, ProductSystem, adaptive_route, \
+    build_product_system, mgk_adaptive, mgk_pairs, mgk_pairs_sparse, \
     mgk_single
 from .octile import (OctileSet, count_nonempty_tiles, expand_octiles,
-                     octile_decompose, tile_occupancy_histogram)
-from .pcg import PCGResult, pcg_solve
+                     feature_operands, octile_decompose,
+                     tile_occupancy_histogram)
+from .pcg import PCGResult, adjoint_solve, pcg_solve
 from .reorder import best_order, morton_order, pbr_order, rcm_order
 
 __all__ = [
     "BaseKernel", "CompactPolynomial", "Constant", "KroneckerDelta",
-    "SquareExponential", "Graph", "GraphBatch", "batch_from_graphs",
+    "SquareExponential", "ParamDerivative", "pack_theta", "unpack_theta",
+    "Graph", "GraphBatch", "batch_from_graphs",
     "pad_graphs", "MGKResult", "ProductSystem", "build_product_system",
-    "mgk_pairs", "mgk_single", "OctileSet", "count_nonempty_tiles",
+    "mgk_pairs", "mgk_single", "mgk_pairs_sparse", "mgk_adaptive",
+    "adaptive_route", "OctileSet", "count_nonempty_tiles",
     "expand_octiles", "octile_decompose", "tile_occupancy_histogram",
-    "PCGResult", "pcg_solve", "best_order", "morton_order", "pbr_order",
-    "rcm_order",
+    "feature_operands", "PCGResult", "pcg_solve", "adjoint_solve",
+    "best_order", "morton_order", "pbr_order", "rcm_order",
+    "kernel_theta", "mgk_value_fn", "mgk_pairs_value_and_grad",
+    "mgk_pairs_sparse_value_and_grad", "mgk_adaptive_value_and_grad",
+    "flatten_grads",
 ]

@@ -34,7 +34,8 @@ from .xmv import xmv_elementwise, xmv_full, xmv_lowrank_precomputed, \
     weighted_operands
 
 __all__ = ["MGKResult", "mgk_pairs", "mgk_single", "ProductSystem",
-           "build_product_system"]
+           "build_product_system", "mgk_pairs_sparse", "mgk_adaptive",
+           "adaptive_route", "stop_prob_override"]
 
 
 class ProductSystem(NamedTuple):
@@ -58,12 +59,32 @@ def _outer_flat(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return (a[:, :, None] * b[:, None, :]).reshape(a.shape[0], -1)
 
 
+def stop_prob_override(g: GraphBatch, q) -> GraphBatch:
+    """Rebuild a batch's stopping probability (and the degrees derived
+    from it, paper's d_i = Σ_j A_ij + q_i) from a scalar ``q`` — possibly
+    a tracer, the differentiable-hyperparameter path of core/adjoint.py.
+    Padding conventions preserved: stop zero-padded, degrees one-padded."""
+    stop = q * g.node_mask
+    deg = jnp.where(g.node_mask > 0, g.adjacency.sum(-1) + stop,
+                    jnp.ones_like(stop))
+    return g._replace(stop_prob=stop, degrees=deg)
+
+
 def build_product_system(g1: GraphBatch, g2: GraphBatch,
-                         vertex_kernel: BaseKernel) -> ProductSystem:
+                         vertex_kernel: BaseKernel,
+                         theta_v=None, q=None) -> ProductSystem:
+    """Diagonal terms of the product system. ``theta_v`` overrides the
+    vertex kernel's hyperparameters with (possibly traced) values via
+    ``BaseKernel.apply``; scalar ``q`` overrides both graphs' stopping
+    probability (DESIGN.md §7)."""
+    if q is not None:
+        g1 = stop_prob_override(g1, q)
+        g2 = stop_prob_override(g2, q)
     mask = _outer_flat(g1.node_mask, g2.node_mask)
-    vx = vertex_kernel(
-        g1.vertex_labels[:, :, None],
-        g2.vertex_labels[:, None, :]).reshape(mask.shape)
+    x1 = g1.vertex_labels[:, :, None]
+    x2 = g2.vertex_labels[:, None, :]
+    vx = (vertex_kernel(x1, x2) if theta_v is None
+          else vertex_kernel.apply(x1, x2, theta_v)).reshape(mask.shape)
     # padded entries: vx=1, dx=1 keeps the padded diagonal SPD & decoupled
     vx = jnp.where(mask > 0, vx, 1.0)
     dx = _outer_flat(g1.degrees, g2.degrees)
@@ -74,28 +95,40 @@ def build_product_system(g1: GraphBatch, g2: GraphBatch,
 
 
 def _make_matvec(g1: GraphBatch, g2: GraphBatch, sys_: ProductSystem,
-                 edge_kernel: BaseKernel, method: str, chunk: int):
-    """Returns matvec([B, n*m]) applying (D_x V_x^{-1} - A_x .* E_x)."""
+                 edge_kernel: BaseKernel, method: str, chunk: int,
+                 theta_e=None, raw: bool = False):
+    """Returns matvec([B, n*m]) applying (D_x V_x^{-1} - A_x .* E_x).
+
+    ``theta_e`` (dict, values possibly traced) overrides the edge
+    kernel's hyperparameters on every backend; ``raw=True`` instead
+    returns the pure XMV application ``p -> (A_x .* E_x) p`` (no
+    diagonal) — the building block of the adjoint parameter contraction
+    ``λᵀ (∂A/∂θ) x``, which runs these same backends with kappa replaced
+    by ∂kappa/∂θ (core/adjoint.py, DESIGN.md §7)."""
     B, n = g1.adjacency.shape[0], g1.adjacency.shape[1]
     m = g2.adjacency.shape[1]
-    diag = sys_.dx / sys_.vx
+    diag = None if raw else sys_.dx / sys_.vx
 
     if method == "lowrank":
-        wa = jax.vmap(lambda a, e: weighted_operands(a, e, edge_kernel))(
-            g1.adjacency, g1.edge_labels)   # [B, R, n, n]
-        wap = jax.vmap(lambda a, e: weighted_operands(a, e, edge_kernel))(
-            g2.adjacency, g2.edge_labels)   # [B, R, m, m]
+        wo = lambda a, e: weighted_operands(a, e, edge_kernel,   # noqa
+                                            theta=theta_e)
+        wa = jax.vmap(wo)(g1.adjacency, g1.edge_labels)   # [B, R, n, n]
+        wap = jax.vmap(wo)(g2.adjacency, g2.edge_labels)  # [B, R, m, m]
 
         def matvec(p_vec):
             P = p_vec.reshape(B, n, m)
             y = jax.vmap(xmv_lowrank_precomputed)(wa, wap, P)
-            return diag * p_vec - y.reshape(B, -1)
+            y = y.reshape(B, -1)
+            return y if raw else diag * p_vec - y
         return matvec
 
     if method == "pallas":
         # imported lazily: kernels package depends on core
         from repro.kernels import ops as kops
-        diag_nm = diag.reshape(B, n, m)
+        from .base_kernels import pack_theta
+        tvec = None if theta_e is None else pack_theta(edge_kernel,
+                                                       theta_e)
+        diag_nm = None if raw else diag.reshape(B, n, m)
 
         def matvec(p_vec):
             # fused epilogue: the kernel itself emits diag*p - y, so one
@@ -103,15 +136,18 @@ def _make_matvec(g1: GraphBatch, g2: GraphBatch, sys_: ProductSystem,
             P = p_vec.reshape(B, n, m)
             out = kops.xmv_dense_batched(g1.adjacency, g1.edge_labels,
                                          g2.adjacency, g2.edge_labels, P,
-                                         edge_kernel, diag=diag_nm)
+                                         edge_kernel, diag=diag_nm,
+                                         theta=tvec)
             return out.reshape(B, -1)
         return matvec
 
     if method == "full":
-        xmv_one = functools.partial(xmv_full, edge_kernel=edge_kernel)
+        xmv_one = functools.partial(xmv_full, edge_kernel=edge_kernel,
+                                    theta=theta_e)
     elif method == "elementwise":
         xmv_one = functools.partial(xmv_elementwise,
-                                    edge_kernel=edge_kernel, chunk=chunk)
+                                    edge_kernel=edge_kernel, chunk=chunk,
+                                    theta=theta_e)
     else:
         raise ValueError(f"unknown method {method!r}")
 
@@ -119,7 +155,64 @@ def _make_matvec(g1: GraphBatch, g2: GraphBatch, sys_: ProductSystem,
         P = p_vec.reshape(B, n, m)
         y = jax.vmap(lambda a, e, ap, ep, pp: xmv_one(a, e, ap, ep, pp))(
             g1.adjacency, g1.edge_labels, g2.adjacency, g2.edge_labels, P)
-        return diag * p_vec - y.reshape(B, -1)
+        y = y.reshape(B, -1)
+        return y if raw else diag * p_vec - y
+    return matvec
+
+
+def _make_sparse_matvec(sys_: ProductSystem, packs1, packs2,
+                        edge_kernel: BaseKernel, sparse_mode: str,
+                        shape: tuple[int, int, int],
+                        theta_e=None, raw: bool = False):
+    """Block-sparse analogue of :func:`_make_matvec` over stacked packs
+    (RowPanelPack -> row-panel kernel, TilePack -> legacy batched grid).
+
+    With ``theta_e``, traced edge hyperparameters reach the kernels two
+    ways (DESIGN.md §7): the elementwise mode takes a packed theta
+    vector straight into the Pallas kernel; the MXU mode re-derives the
+    weighted operands ``values_w`` on device from the pack's structural
+    fields (``device_weighted_pack``) — unless the pack already carries
+    weights and ``theta_e`` is None, in which case the pack-time host
+    precompute is trusted as-is."""
+    from repro.kernels.ops import RowPanelPack, device_weighted_pack, \
+        xmv_block_sparse_batched, xmv_row_panel_batched
+    from .base_kernels import pack_theta
+
+    B, n, m = shape
+    diag = None if raw else sys_.dx / sys_.vx
+    diag_nm = None if raw else diag.reshape(B, n, m)
+    row_panel = isinstance(packs1, RowPanelPack)
+    tvec = None
+    if row_panel:
+        have_w = packs1.values_w is not None and \
+            packs2.values_w is not None
+        # "auto" follows the PACK-TIME intent exactly like _resolve_mode:
+        # packs built without weights run elementwise (exact, theta via
+        # the in-kernel vector) even when the edge kernel could expand —
+        # a theta override must not silently introduce truncation error
+        mxu = sparse_mode == "mxu" or (sparse_mode == "auto" and have_w)
+        if mxu and (theta_e is not None or not have_w):
+            packs1 = device_weighted_pack(packs1, edge_kernel,
+                                          theta=theta_e)
+            packs2 = device_weighted_pack(packs2, edge_kernel,
+                                          theta=theta_e)
+        if not mxu and theta_e is not None:
+            tvec = pack_theta(edge_kernel, theta_e)
+        mode = "mxu" if mxu else "elementwise"
+
+    def matvec(p_vec):
+        # with diag: the fused in-kernel epilogue emits diag*p - y (the
+        # full operator application); raw mode (diag None) emits +y, the
+        # pure XMV the adjoint contraction needs
+        P = p_vec.reshape(B, n, m)
+        if row_panel:
+            out = xmv_row_panel_batched(packs1, packs2, P, edge_kernel,
+                                        diag=diag_nm, mode=mode,
+                                        theta=tvec)
+        else:
+            out = xmv_block_sparse_batched(packs1, packs2, P, edge_kernel,
+                                           diag=diag_nm)
+        return out.reshape(B, -1)
     return matvec
 
 
@@ -177,35 +270,28 @@ def tile_density(batch: GraphBatch, tile: int = 8) -> float:
     return float(np.mean(dens))
 
 
-def mgk_adaptive(g1: GraphBatch, g2: GraphBatch,
-                 vertex_kernel: BaseKernel = Constant(1.0),
-                 edge_kernel: BaseKernel = Constant(1.0),
-                 *, density_threshold: float = 0.15,
-                 tile: int = 8,
-                 tol: float = 1e-10, max_iter: int = 512,
-                 fixed_iters: int | None = None,
-                 pcg_variant: str = "classic") -> MGKResult:
-    """The paper's adaptive primitive switch (Sec. IV-B), lifted to the
-    bucket level: pick the XMV backend per pair-batch from the octile
-    density statistic AND the edge kernel's feature expansion
-    (DESIGN.md §3 dispatch table):
+def adaptive_route(g1: GraphBatch, g2: GraphBatch,
+                   edge_kernel: BaseKernel,
+                   density_threshold: float = 0.15,
+                   tile: int = 8) -> tuple[str, int]:
+    """The adaptive dispatch DECISION (host-side), shared by
+    :func:`mgk_adaptive` and the differentiable entry points of
+    ``core/adjoint.py`` so both walk the same table:
 
     =============  ==================  =====================================
-    octile dens.   feature expansion   backend
+    octile dens.   feature expansion   route
     =============  ==================  =====================================
-    < threshold    usable              sparse row-panel, MXU contraction
-    < threshold    none                sparse row-panel, elementwise (VPU)
-    >= threshold   usable              dense low-rank MXU sandwich
-    >= threshold   none                dense tiling&blocking Pallas kernel
+    < threshold    usable              "sparse_mxu"  (row-panel, MXU)
+    < threshold    none                "sparse_vpu"  (row-panel, VPU)
+    >= threshold   usable              "lowrank"     (dense MXU sandwich)
+    >= threshold   none                "pallas"      (dense tiling kernel)
     =============  ==================  =====================================
 
     "usable" = ``feature_rank()`` is not None, the rank is small against
     ``density * n``, and the labels stay inside the expansion's accuracy
-    domain (the SE Taylor truncation) — otherwise exact elementwise paths.
-
-    ``tile`` is the octile edge for the sparse paths; it is shrunk to the
-    largest of {tile, 16, 8} dividing the bucket's padded size, so any
-    8-aligned bucket works.
+    domain (the SE Taylor truncation) — otherwise exact elementwise
+    paths. Returns (route, tile) with ``tile`` shrunk to the largest of
+    {tile, 16, 8} dividing the bucket's padded size.
     """
     import numpy as np
     rank = edge_kernel.feature_rank()
@@ -223,21 +309,37 @@ def mgk_adaptive(g1: GraphBatch, g2: GraphBatch,
             rank = None
     rank_usable = rank is not None and rank <= max(16, dens * n)
     if dens < density_threshold:
+        return ("sparse_mxu" if rank_usable else "sparse_vpu"), tile
+    return ("lowrank" if rank_usable else "pallas"), tile
+
+
+def mgk_adaptive(g1: GraphBatch, g2: GraphBatch,
+                 vertex_kernel: BaseKernel = Constant(1.0),
+                 edge_kernel: BaseKernel = Constant(1.0),
+                 *, density_threshold: float = 0.15,
+                 tile: int = 8,
+                 tol: float = 1e-10, max_iter: int = 512,
+                 fixed_iters: int | None = None,
+                 pcg_variant: str = "classic") -> MGKResult:
+    """The paper's adaptive primitive switch (Sec. IV-B), lifted to the
+    bucket level: pick the XMV backend per pair-batch from the octile
+    density statistic AND the edge kernel's feature expansion — the
+    :func:`adaptive_route` table (DESIGN.md §3.4)."""
+    route, tile = adaptive_route(g1, g2, edge_kernel,
+                                 density_threshold=density_threshold,
+                                 tile=tile)
+    if route.startswith("sparse"):
         from repro.kernels.ops import row_panel_packs_for_batch
-        ek_pack = edge_kernel if rank_usable else None
+        ek_pack = edge_kernel if route == "sparse_mxu" else None
         return mgk_pairs_sparse(
             g1, g2,
             row_panel_packs_for_batch(g1, tile=tile, edge_kernel=ek_pack),
             row_panel_packs_for_batch(g2, tile=tile, edge_kernel=ek_pack),
             vertex_kernel, edge_kernel,
-            sparse_mode="mxu" if rank_usable else "elementwise",
+            sparse_mode="mxu" if route == "sparse_mxu" else "elementwise",
             tol=tol, max_iter=max_iter, fixed_iters=fixed_iters,
             pcg_variant=pcg_variant)
-    if rank_usable:
-        return mgk_pairs(g1, g2, vertex_kernel, edge_kernel,
-                         method="lowrank", tol=tol, max_iter=max_iter,
-                         fixed_iters=fixed_iters, pcg_variant=pcg_variant)
-    return mgk_pairs(g1, g2, vertex_kernel, edge_kernel, method="pallas",
+    return mgk_pairs(g1, g2, vertex_kernel, edge_kernel, method=route,
                      tol=tol, max_iter=max_iter, fixed_iters=fixed_iters,
                      pcg_variant=pcg_variant)
 
@@ -276,24 +378,12 @@ def mgk_pairs_sparse(
     the whole bucket's matvec is ONE ``pallas_call`` with the diagonal
     epilogue fused in-kernel (DESIGN.md §3); shares mgk_pairs'
     ``fixed_iters``/``pcg_variant`` contract."""
-    from repro.kernels.ops import RowPanelPack, xmv_block_sparse_batched, \
-        xmv_row_panel_batched
-
     sys_ = build_product_system(g1, g2, vertex_kernel)
     B, n = g1.adjacency.shape[0], g1.adjacency.shape[1]
     m = g2.adjacency.shape[1]
     diag = sys_.dx / sys_.vx
-    diag_nm = diag.reshape(B, n, m)
-
-    def matvec(p_vec):
-        P = p_vec.reshape(B, n, m)
-        if isinstance(packs1, RowPanelPack):
-            out = xmv_row_panel_batched(packs1, packs2, P, edge_kernel,
-                                        diag=diag_nm, mode=sparse_mode)
-        else:
-            out = xmv_block_sparse_batched(packs1, packs2, P, edge_kernel,
-                                           diag=diag_nm)
-        return out.reshape(B, -1)
+    matvec = _make_sparse_matvec(sys_, packs1, packs2, edge_kernel,
+                                 sparse_mode, (B, n, m))
 
     rhs = sys_.dx * sys_.qx
     sol = pcg_solve(matvec, rhs, diag, tol=tol, max_iter=max_iter,

@@ -26,6 +26,15 @@ Two recurrences (``variant=``, DESIGN.md §3):
   latency per iteration instead of two. Unlike the fully-recurred
   Ghysels–Vanroose variant, u = M^{-1} r and w = A u stay freshly
   computed, so f32 attainable accuracy matches classic PCG.
+
+Differentiability: the dynamic ``while_loop`` body is NOT reverse-mode
+differentiable, and unrolling the iteration for autodiff would store
+every iterate. Gradients of solutions therefore go through the implicit
+function theorem instead — ``x̄ -> λ`` with ``Aᵀ λ = x̄`` — which for the
+MGK's SYMMETRIC generalized Laplacian is just a second ``pcg_solve``
+with the *identical* matvec closure (:func:`adjoint_solve`). The
+``jax.custom_vjp`` that packages this lives in ``core/adjoint.py``
+(DESIGN.md §7); this module stays a plain primal solver.
 """
 from __future__ import annotations
 
@@ -34,7 +43,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["PCGResult", "pcg_solve"]
+__all__ = ["PCGResult", "pcg_solve", "adjoint_solve"]
 
 
 class PCGResult(NamedTuple):
@@ -98,6 +107,27 @@ def pcg_solve(
         return _pcg_pipelined(matvec, b, diag_precond, tol=tol,
                               max_iter=max_iter, fixed_iters=fixed_iters)
     raise ValueError(f"unknown PCG variant {variant!r}")
+
+
+def adjoint_solve(
+    matvec: Callable[[jnp.ndarray], jnp.ndarray],
+    cotangent: jnp.ndarray,
+    diag_precond: jnp.ndarray,
+    **kw,
+) -> PCGResult:
+    """Solve the adjoint system ``Aᵀ λ = x̄`` of a forward ``A x = b``.
+
+    The MGK's generalized Laplacian is symmetric (paper Eq. 15), so
+    ``Aᵀ = A`` and the adjoint solve IS a forward solve with the same
+    matvec closure — same Pallas kernels, same packs, same
+    preconditioner, same cost. This alias exists to make that reuse an
+    explicit, testable contract (core/adjoint.py builds its backward
+    pass on it; DESIGN.md §7) rather than a coincidence at call sites.
+
+    Accepts every :func:`pcg_solve` keyword (tol/max_iter/fixed_iters/
+    variant).
+    """
+    return pcg_solve(matvec, cotangent, diag_precond, **kw)
 
 
 def _pcg_classic(matvec, b, diag_precond, *, tol, max_iter, fixed_iters):

@@ -224,7 +224,11 @@ def pbr_order(adjacency: np.ndarray, tile: int = 8,
     Multi-start: the recursive bipartitioning is seeded from ``restarts``
     different growth roots and the ordering with the fewest non-empty
     tiles (the objective itself, paper Eq. 3) is kept — the cheap stand-in
-    for the hypergraph partitioner's randomized coarsening in [8].
+    for the hypergraph partitioner's randomized coarsening in [8]. The
+    identity permutation competes as a zeroth candidate, so PBR is
+    never-worse-than-natural BY CONSTRUCTION (the invariant the property
+    suite asserts, tests/test_reorder.py): graphs whose natural order is
+    already tile-optimal (banded molecules, pre-ordered inputs) keep it.
     """
     a = np.asarray(adjacency)
     n = a.shape[0]
@@ -265,11 +269,12 @@ def pbr_order(adjacency: np.ndarray, tile: int = 8,
         recurse(np.arange(n))
         return np.array(order, dtype=np.int64)
 
-    best_perm, best_score = None, None
+    best_perm = np.arange(n, dtype=np.int64)   # identity: the floor
+    best_score = count_nonempty_tiles(a, tile)
     for seed in range(restarts):
         perm = one_run(seed)
         score = count_nonempty_tiles(a[np.ix_(perm, perm)], tile)
-        if best_score is None or score < best_score:
+        if score < best_score:
             best_perm, best_score = perm, score
     return best_perm
 

@@ -34,19 +34,29 @@ import jax.numpy as jnp
 
 from .base_kernels import BaseKernel
 
-__all__ = ["xmv_full", "xmv_elementwise", "xmv_lowrank", "weighted_operands"]
+__all__ = ["xmv_full", "xmv_elementwise", "xmv_lowrank",
+           "weighted_operands", "weighted_operand_grads"]
 
 
-def xmv_full(A, E, Ap, Ep, P, edge_kernel: BaseKernel):
+def _kappa(edge_kernel: BaseKernel, x, y, theta):
+    """kappa via ``apply`` when a theta override rides along (traced
+    hyperparameters, DESIGN.md §7), else the plain static-param call."""
+    if theta is None:
+        return edge_kernel(x, y)
+    return edge_kernel.apply(x, y, theta)
+
+
+def xmv_full(A, E, Ap, Ep, P, edge_kernel: BaseKernel, theta=None):
     """Exact XMV via full product materialization. O(n^2 m^2) memory."""
     # K[i, j, ip, jp] = kappa(E[i, j], Ep[ip, jp])
-    K = edge_kernel(E[:, :, None, None], Ep[None, None, :, :])
+    K = _kappa(edge_kernel, E[:, :, None, None], Ep[None, None, :, :],
+               theta)
     W = A[:, :, None, None] * Ap[None, None, :, :] * K
     return jnp.einsum("ijkl,jl->ik", W, P)
 
 
 def xmv_elementwise(A, E, Ap, Ep, P, edge_kernel: BaseKernel,
-                    chunk: int = 8):
+                    chunk: int = 8, theta=None):
     """Paper-faithful streaming XMV: scan over length-``chunk`` column
     blocks of (A, E), regenerating kappa products on the fly. Peak temp
     memory O(chunk * n * m^2) instead of O(n^2 m^2).
@@ -64,7 +74,8 @@ def xmv_elementwise(A, E, Ap, Ep, P, edge_kernel: BaseKernel,
         Ej = jax.lax.dynamic_slice(E, (0, j0), (n, chunk))      # [n, c]
         Pj = jax.lax.dynamic_slice(P, (j0, 0), (chunk, m))      # [c, m]
         # kappa between this chunk's labels and ALL of E': [n, c, m, m]
-        K = edge_kernel(Ej[:, :, None, None], Ep[None, None, :, :])
+        K = _kappa(edge_kernel, Ej[:, :, None, None],
+                   Ep[None, None, :, :], theta)
         W = Aj[:, :, None, None] * Ap[None, None, :, :] * K
         y = y + jnp.einsum("ickl,cl->ik", W, Pj)
         return y, None
@@ -74,14 +85,24 @@ def xmv_elementwise(A, E, Ap, Ep, P, edge_kernel: BaseKernel,
     return y
 
 
-def weighted_operands(A, E, edge_kernel: BaseKernel):
+def weighted_operands(A, E, edge_kernel: BaseKernel, theta=None):
     """[R, n, n] stack of (A .* phi_r(E)) for the low-rank path."""
-    phi = edge_kernel.features(E)  # [n, n, R]
+    phi = edge_kernel.features_theta(E, theta) if theta is not None \
+        else edge_kernel.features(E)  # [n, n, R]
     if phi is None:
         raise ValueError(
             f"{type(edge_kernel).__name__} has no feature expansion; use the"
             " elementwise path")
     return jnp.einsum("ij,ijr->rij", A, phi)
+
+
+def weighted_operand_grads(A, E, edge_kernel: BaseKernel,
+                           theta=None) -> dict:
+    """Per-parameter [R, n, n] stacks of (A .* ∂phi_r(E)/∂θ) — the
+    low-rank path's analytic operand derivatives (DESIGN.md §7)."""
+    dphi = edge_kernel.dfeatures(E, theta)
+    return {name: jnp.einsum("ij,ijr->rij", A, d)
+            for name, d in dphi.items()}
 
 
 def xmv_lowrank(A, E, Ap, Ep, P, edge_kernel: BaseKernel):

@@ -26,7 +26,8 @@ import numpy as np
 
 import jax
 
-__all__ = ["ChunkStore", "save_array_checkpoint", "load_array_checkpoint"]
+__all__ = ["ChunkStore", "assemble_blocks", "save_array_checkpoint",
+           "load_array_checkpoint"]
 
 
 def _atomic_write(path: str, data: bytes) -> None:
@@ -70,14 +71,19 @@ class ChunkStore:
         return os.path.join(self.root, f"block_{block_id:08d}.npz")
 
     def save_block(self, block_id: int, rows: np.ndarray, cols: np.ndarray,
-                   values: np.ndarray, iterations: np.ndarray) -> bool:
-        """Returns False if the block was already recorded (speculation)."""
+                   values: np.ndarray, iterations: np.ndarray,
+                   **extra: np.ndarray) -> bool:
+        """Returns False if the block was already recorded (speculation).
+
+        ``extra`` arrays (e.g. the gradient Gram blocks ``grad_<theta>``
+        of GramDriver.run_with_grad) ride in the same npz under their
+        given names and come back verbatim from :meth:`load_block`."""
         if block_id in self.done_blocks():
             return False
         import io
         buf = io.BytesIO()
         np.savez(buf, rows=rows, cols=cols, values=values,
-                 iterations=iterations)
+                 iterations=iterations, **extra)
         data = buf.getvalue()
         path = self.block_path(block_id)
         _atomic_write(path, data)
@@ -101,17 +107,30 @@ class ChunkStore:
         import io
         return dict(np.load(io.BytesIO(data)))
 
-    def assemble_gram(self, n: int, normalize: bool = False) -> np.ndarray:
-        """Gather all completed blocks into the (symmetric) Gram matrix."""
-        K = np.full((n, n), np.nan, np.float64)
-        for bid in sorted(self.done_blocks()):
-            blk = self.load_block(bid)
-            K[blk["rows"], blk["cols"]] = blk["values"]
-            K[blk["cols"], blk["rows"]] = blk["values"]
+    def assemble_gram(self, n: int, normalize: bool = False,
+                      key: str = "values") -> np.ndarray:
+        """Gather all completed blocks into the (symmetric) Gram matrix
+        (``key`` selects which per-block array — e.g. a ``grad_<theta>``
+        gradient block)."""
+        K = assemble_blocks(
+            (self.load_block(bid) for bid in sorted(self.done_blocks())),
+            n, key)
         if normalize:
             d = np.sqrt(np.diag(K))
             K = K / d[:, None] / d[None, :]
         return K
+
+
+def assemble_blocks(blocks, n: int, key: str = "values") -> np.ndarray:
+    """THE fill-and-mirror Gram assembly convention (NaN init for
+    missing entries, symmetric scatter by each block's own rows/cols) —
+    single implementation shared by :meth:`ChunkStore.assemble_gram` and
+    the driver's in-memory path (distributed/gram.py)."""
+    M = np.full((n, n), np.nan, np.float64)
+    for blk in blocks:
+        M[blk["rows"], blk["cols"]] = blk[key]
+        M[blk["cols"], blk["rows"]] = blk[key]
+    return M
 
 
 # -- pytree checkpoints for LM training --------------------------------------

@@ -55,11 +55,12 @@ class GraphPackCache:
     """
 
     def __init__(self, tile: int = 8, edge_kernel=None,
-                 max_entries: int = 65536):
+                 max_entries: int = 65536, with_grad: bool = False):
         import collections
         self.tile = tile
         self.edge_kernel = edge_kernel
         self.max_entries = max_entries
+        self.with_grad = with_grad   # also bake values_grad companions
         self._packs: "collections.OrderedDict" = collections.OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -80,7 +81,7 @@ class GraphPackCache:
         # as_numpy: the cache re-pads and stacks host-side; the single
         # device transfer happens in stacked()
         p = pack_row_panels(oset, edge_kernel=self.edge_kernel,
-                            as_numpy=True)
+                            as_numpy=True, with_grad=self.with_grad)
         entry = {f: getattr(p, f) for f in type(p)._fields}
         self._packs[key] = entry
         return entry
@@ -172,8 +173,20 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
                    fixed_iters: int | None = None,
                    pcg_variant: str = "classic",
                    sparse_mode: str = "auto",
-                   tile: int = 8) -> Callable:
+                   tile: int = 8,
+                   with_grad: bool = False) -> Callable:
     """Build the pair-solve step for a mesh.
+
+    ``with_grad=True`` builds a GRADIENT step instead: each pair block
+    returns ``(MGKResult, {"vertex.h": [B], "edge.alpha": [B], ...})`` —
+    the hyperparameter gradients ∂K/∂θ of every pair, computed by the
+    adjoint-PCG custom VJP (core/adjoint.py) in the SAME pass (one
+    forward + one adjoint solve per block; DESIGN.md §7). On the sparse
+    path the pack cache bakes the ``values_w``/``values_grad`` operand
+    buffers once per graph and both solves trust them
+    (``trust_pack_weights``), so a graph is decomposed-and-weighted once
+    per bucket size for the whole gradient Gram. Gradient steps run
+    host-driven (pair-data-parallel over blocks, no "model" sharding).
 
     ``pcg_variant="pipelined"`` halves the per-iteration all-reduce rounds
     when the product rows are sharded over "model" (DESIGN.md §3/§4);
@@ -191,6 +204,8 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
     ``tile`` sets the octile edge (buckets must pad to a multiple).
     The step accepts optional ``rows``/``cols`` dataset indices (the
     driver passes them; without them the packs are built uncached)."""
+    solve_kw = dict(tol=tol, max_iter=max_iter, fixed_iters=fixed_iters,
+                    pcg_variant=pcg_variant)
     if method == "pallas_sparse":
         from repro.kernels.ops import row_panel_packs_for_batch
 
@@ -207,10 +222,10 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
         # same guard as mgk_adaptive; explicit "mxu" is honored as given
         domain = getattr(edge_kernel, "domain", None) \
             if sparse_mode == "auto" else None
-        cache = GraphPackCache(tile=tile, edge_kernel=ek_pack)
+        cache = GraphPackCache(tile=tile, edge_kernel=ek_pack,
+                               with_grad=with_grad)
 
-        def sparse_step(g1: GraphBatch, g2: GraphBatch,
-                        rows=None, cols=None) -> MGKResult:
+        def _block_packs(g1, g2, rows, cols):
             block_mode = mode
             if mode == "mxu" and domain is not None:
                 lmax = max(float(np.abs(np.asarray(g1.edge_labels)).max()),
@@ -219,17 +234,44 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
                     block_mode = "elementwise"
             if rows is None or cols is None:
                 p1 = row_panel_packs_for_batch(g1, tile=tile,
-                                               edge_kernel=ek_pack)
+                                               edge_kernel=ek_pack,
+                                               with_grad=with_grad)
                 p2 = row_panel_packs_for_batch(g2, tile=tile,
-                                               edge_kernel=ek_pack)
+                                               edge_kernel=ek_pack,
+                                               with_grad=with_grad)
             else:
                 p1 = cache.stacked(rows, g1)
                 p2 = cache.stacked(cols, g2)
+            return p1, p2, block_mode
+
+        if with_grad:
+            from repro.core.adjoint import flatten_grads, kernel_theta, \
+                mgk_value_fn
+            theta = kernel_theta(vertex_kernel, edge_kernel)
+
+            def grad_sparse_step(g1, g2, rows=None, cols=None):
+                p1, p2, block_mode = _block_packs(g1, g2, rows, cols)
+                fn = mgk_value_fn(g1, g2, vertex_kernel, edge_kernel,
+                                  method="sparse", packs1=p1, packs2=p2,
+                                  sparse_mode=block_mode,
+                                  trust_pack_weights=True, **solve_kw)
+                vals, grads, sol = fn.value_and_pair_grads(theta,
+                                                           with_aux=True)
+                res = MGKResult(values=vals, iterations=sol.iterations,
+                                converged=sol.converged, nodal=None)
+                return res, flatten_grads(grads)
+
+            grad_sparse_step.pack_cache = cache
+            grad_sparse_step.wants_indices = True
+            grad_sparse_step.with_grad = True
+            return grad_sparse_step
+
+        def sparse_step(g1: GraphBatch, g2: GraphBatch,
+                        rows=None, cols=None) -> MGKResult:
+            p1, p2, block_mode = _block_packs(g1, g2, rows, cols)
             res = mgk_pairs_sparse(g1, g2, p1, p2, vertex_kernel,
                                    edge_kernel, sparse_mode=block_mode,
-                                   tol=tol, max_iter=max_iter,
-                                   fixed_iters=fixed_iters,
-                                   pcg_variant=pcg_variant)
+                                   **solve_kw)
             return MGKResult(values=res.values, iterations=res.iterations,
                              converged=res.converged, nodal=None)
 
@@ -237,12 +279,28 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
         sparse_step.wants_indices = True
         return sparse_step
 
+    if with_grad:
+        from repro.core.adjoint import flatten_grads, kernel_theta, \
+            mgk_value_fn
+        theta = kernel_theta(vertex_kernel, edge_kernel)
+
+        def grad_step(g1: GraphBatch, g2: GraphBatch):
+            fn = mgk_value_fn(g1, g2, vertex_kernel, edge_kernel,
+                              method=method, **solve_kw)
+            vals, grads, sol = fn.value_and_pair_grads(theta,
+                                                       with_aux=True)
+            res = MGKResult(values=vals, iterations=sol.iterations,
+                            converged=sol.converged, nodal=None)
+            return res, flatten_grads(grads)
+
+        grad_step.with_grad = True
+        return grad_step
+
     (g1_s, g2_s), out_s = pair_shardings(mesh)
 
     def step(g1: GraphBatch, g2: GraphBatch) -> MGKResult:
         res = mgk_pairs(g1, g2, vertex_kernel, edge_kernel, method=method,
-                        tol=tol, max_iter=max_iter,
-                        fixed_iters=fixed_iters, pcg_variant=pcg_variant)
+                        **solve_kw)
         return MGKResult(values=res.values, iterations=res.iterations,
                          converged=res.converged, nodal=None)
 
@@ -287,12 +345,20 @@ def solve_pair_block(ds: BucketedDataset, block: PairBlock, step: Callable,
                    rows=block.rows, cols=block.cols)
     else:
         res = step(_pad_batch(g1, to), _pad_batch(g2, to))
-    return {
+    grads = None
+    if getattr(step, "with_grad", False):
+        res, grads = res
+    out = {
         "rows": np.asarray(block.rows),
         "cols": np.asarray(block.cols),
         "values": np.asarray(res.values)[:B],
         "iterations": np.asarray(res.iterations)[:B],
     }
+    if grads is not None:
+        # ∂K/∂θ blocks ride along as extra arrays, one per flat key
+        out.update({f"grad_{k}": np.asarray(v)[:B]
+                    for k, v in grads.items()})
+    return out
 
 
 @dataclasses.dataclass
@@ -338,13 +404,31 @@ class GramDriver:
 
     def run(self, progress: Callable[[int, int], None] | None = None
             ) -> np.ndarray:
+        return self._run(progress, with_grad=False)[0]
+
+    def run_with_grad(
+        self, progress: Callable[[int, int], None] | None = None
+    ) -> tuple[np.ndarray, dict[str, np.ndarray]]:
+        """Compute the Gram matrix AND its hyperparameter gradient blocks
+        ``{"vertex.h": [N,N], "edge.alpha": [N,N], ...}`` in one pass
+        (one forward + one adjoint PCG solve per pair block; the sparse
+        pack cache is shared between both solves). With
+        ``normalize=True`` the gradients are of the NORMALIZED Gram
+        K̂_ij = K_ij / sqrt(K_ii K_jj):
+
+            ∂K̂_ij = ∂K_ij / sqrt(K_ii K_jj)
+                    - K̂_ij (∂K_ii / K_ii + ∂K_jj / K_jj) / 2
+        """
+        return self._run(progress, with_grad=True)
+
+    def _run(self, progress, with_grad: bool):
         step = gram_pair_step(self.mesh, self.vertex_kernel,
                               self.edge_kernel, method=self.method,
                               tol=self.tol, max_iter=self.max_iter,
                               fixed_iters=self.fixed_iters,
                               pcg_variant=self.pcg_variant,
                               sparse_mode=self.sparse_mode,
-                              tile=self.tile)
+                              tile=self.tile, with_grad=with_grad)
         blocks = self.blocks()
         by_id = {b.block_id: b for b in blocks}
         done = self.store.done_blocks() if self.store else set()
@@ -361,12 +445,47 @@ class GramDriver:
                 progress(i + 1, len(todo))
         n = len(self.ds)
         if self.store:
-            return self.store.assemble_gram(n, normalize=self.normalize)
-        K = np.full((n, n), np.nan)
-        for out in results.values():
-            K[out["rows"], out["cols"]] = out["values"]
-            K[out["cols"], out["rows"]] = out["values"]
+            results = {bid: self.store.load_block(bid)
+                       for bid in self.store.done_blocks()}
+        if with_grad:
+            # a store populated by a plain run() has value-only blocks;
+            # recompute those in memory (save_block is first-writer-wins,
+            # so the store keeps its value-only records) instead of
+            # silently assembling empty/partial gradients
+            want = [f"grad_vertex.{p}" for p in
+                    self.vertex_kernel.param_names()] + \
+                   [f"grad_edge.{p}" for p in
+                    self.edge_kernel.param_names()]
+            for bid, out in list(results.items()):
+                if any(k not in out for k in want):
+                    if bid not in by_id:
+                        raise ValueError(
+                            f"store block {bid} lacks gradient arrays and"
+                            f" is not part of the current block plan"
+                            f" (pairs_per_block changed?) — rerun with the"
+                            f" original pairs_per_block or a fresh store")
+                    results[bid] = solve_pair_block(
+                        self.ds, by_id[bid], step, width)
+
+        from .checkpoint import assemble_blocks
+
+        def assemble(key):
+            return assemble_blocks(results.values(), n, key)
+
+        K = assemble("values")
+        grads = None
+        if with_grad:
+            keys = [k for k in next(iter(results.values()))
+                    if k.startswith("grad_")]
+            grads = {k[len("grad_"):]: assemble(k) for k in keys}
         if self.normalize:
             d = np.sqrt(np.diag(K))
-            K = K / d[:, None] / d[None, :]
-        return K
+            Kn = K / d[:, None] / d[None, :]
+            if grads is not None:
+                grads = {
+                    name: (g / d[:, None] / d[None, :]
+                           - 0.5 * Kn * (np.diag(g) / np.diag(K))[:, None]
+                           - 0.5 * Kn * (np.diag(g) / np.diag(K))[None, :])
+                    for name, g in grads.items()}
+            K = Kn
+        return K, grads

@@ -10,10 +10,10 @@ import jax.numpy as jnp
 
 from .flash_attention import flash_attention
 from .ref import attention_ref, xmv_batched_ref, xmv_ref
-from .xmv_block_sparse import RowPanelPack, TilePack, pack_graph, \
-    pack_graph_row_panels, pack_octiles, pack_row_panels, \
-    xmv_block_sparse, xmv_block_sparse_batched, xmv_row_panel, \
-    xmv_row_panel_batched
+from .xmv_block_sparse import RowPanelPack, TilePack, \
+    device_weighted_pack, pack_graph, pack_graph_row_panels, \
+    pack_octiles, pack_row_panels, xmv_block_sparse, \
+    xmv_block_sparse_batched, xmv_row_panel, xmv_row_panel_batched
 from .xmv_dense import pick_tiles, xmv_dense, xmv_dense_batched
 
 __all__ = [
@@ -22,33 +22,35 @@ __all__ = [
     "pack_graph", "pack_octiles", "TilePack", "RowPanelPack",
     "pack_row_panels", "pack_graph_row_panels", "xmv_row_panel",
     "xmv_row_panel_batched", "stack_row_panel_packs",
+    "device_weighted_pack",
     "row_panel_packs_for_batch", "flash_attention",
     "attention_ref", "xmv_ref", "xmv_batched_ref", "pick_tiles",
 ]
 
 
+def _stack_field(packs, field):
+    """Stack one optional pack field: all-None -> None, else jnp.stack."""
+    vals = [getattr(p, field) for p in packs]
+    if any(v is None for v in vals):
+        if not all(v is None for v in vals):
+            raise ValueError(
+                f"cannot stack packs mixing {field} and None")
+        return None
+    return jnp.stack(vals)
+
+
 def stack_packs(packs: list[TilePack]) -> TilePack:
-    """Stack per-pair TilePacks (same bucket => same shapes) to [B, ...]."""
-    return TilePack(*(jnp.stack([getattr(p, f) for p in packs])
-                      for f in TilePack._fields))
+    """Stack per-pair TilePacks (same bucket => same shapes) to [B, ...];
+    optional fields (``values_grad``) must be present in all or none."""
+    return TilePack(*(_stack_field(packs, f) for f in TilePack._fields))
 
 
 def stack_row_panel_packs(packs: list[RowPanelPack]) -> RowPanelPack:
     """Stack per-pair RowPanelPacks (same bucket => same shapes) to
-    [B, ...]; ``values_w`` must be present in all packs or in none."""
-    ws = [p.values_w for p in packs]
-    if any(w is None for w in ws):
-        if not all(w is None for w in ws):
-            raise ValueError("cannot stack packs mixing values_w and None")
-        vw = None
-    else:
-        vw = jnp.stack(ws)
-    return RowPanelPack(
-        values_adj=jnp.stack([p.values_adj for p in packs]),
-        values_lab=jnp.stack([p.values_lab for p in packs]),
-        values_w=vw,
-        col=jnp.stack([p.col for p in packs]),
-        count=jnp.stack([p.count for p in packs]))
+    [B, ...]; optional fields (``values_w``/``values_grad``) must be
+    present in all packs or in none."""
+    return RowPanelPack(*(_stack_field(packs, f)
+                          for f in RowPanelPack._fields))
 
 
 def _bucket_osets(batch, tile: int):
@@ -78,18 +80,20 @@ def packs_for_batch(batch, tile: int = 8) -> TilePack:
                         for o in osets])
 
 
-def row_panel_packs_for_batch(batch, tile: int = 8,
-                              edge_kernel=None) -> RowPanelPack:
+def row_panel_packs_for_batch(batch, tile: int = 8, edge_kernel=None,
+                              with_grad: bool = False) -> RowPanelPack:
     """Host-side: octile-decompose every graph of a GraphBatch into
     row-panel packs stacked to shared shapes (slot counts padded to the
     bucket max). Pass ``edge_kernel`` with a feature expansion to also
-    precompute the MXU contraction operands (``values_w``)."""
+    precompute the MXU contraction operands (``values_w``);
+    ``with_grad`` adds the ``values_grad`` adjoint companions."""
     import numpy as np
     osets = _bucket_osets(batch, tile)
     k_max = max(max((np.bincount(o.coords[:, 0]).max(initial=0)
                      if o.n_nonempty else 0) for o in osets), 1)
     return stack_row_panel_packs(
-        [pack_row_panels(o, edge_kernel=edge_kernel, k_max=int(k_max))
+        [pack_row_panels(o, edge_kernel=edge_kernel, k_max=int(k_max),
+                         with_grad=with_grad)
          for o in osets])
 
 
@@ -101,10 +105,13 @@ def xmv_block_sparse_unrolled(packs1: TilePack, packs2: TilePack, P,
     (one launch for the whole bucket); kept as the baseline arm of the
     BENCH_xmv comparison and the parity tests."""
     B = P.shape[0]
+
+    def take(pack, b):
+        return TilePack(*(None if arr is None else arr[b] for arr in pack))
+
     ys = [
         xmv_block_sparse(
-            TilePack(*(arr[b] for arr in packs1)),
-            TilePack(*(arr[b] for arr in packs2)),
+            take(packs1, b), take(packs2, b),
             P[b], edge_kernel,
             diag=None if diag is None else diag[b], **kw)
         for b in range(B)

@@ -70,7 +70,7 @@ from repro.core.octile import OctileSet, octile_decompose
 __all__ = ["TilePack", "pack_octiles", "xmv_block_sparse",
            "xmv_block_sparse_batched", "RowPanelPack", "pack_row_panels",
            "pack_graph_row_panels", "xmv_row_panel",
-           "xmv_row_panel_batched"]
+           "xmv_row_panel_batched", "device_weighted_pack"]
 
 
 class TilePack(NamedTuple):
@@ -80,6 +80,12 @@ class TilePack(NamedTuple):
       all-zero (the padding target).
     slot: [n_tile_rows, k_max] int32 -> index into values_*.
     col:  [n_tile_rows, k_max] int32 tile-column (P block index).
+    values_grad: optional [K+1, P, R, t, t] per-parameter feature-
+      derivative operands ``a ∘ ∂f_r(e)/∂θ`` (``pack_octiles`` with an
+      expandable ``edge_kernel``), the adjoint-solve companion buffer
+      (DESIGN.md §7). The legacy kernels below never read it; it exists
+      so cached TilePacks can be converted to gradient-ready row-panel
+      layouts without re-decomposing.
 
     Stacked packs (``ops.stack_packs``) carry a leading [B] axis on every
     field and feed :func:`xmv_block_sparse_batched`. This is the storage
@@ -90,6 +96,7 @@ class TilePack(NamedTuple):
     values_lab: jnp.ndarray
     slot: jnp.ndarray
     col: jnp.ndarray
+    values_grad: jnp.ndarray | None = None
 
     @property
     def tile(self) -> int:
@@ -110,6 +117,13 @@ class RowPanelPack(NamedTuple):
       feature-expandable edge kernel, else None.
     col:   [nt, k_max] int32 tile-column (P block index) per slot.
     count: [nt] int32 *actual* tiles in each row (the SMEM loop bound).
+    values_grad: optional [nt, k_max, P, R, t, t] per-parameter
+      derivative operands ``wg_r = a ∘ ∂f_r(e)/∂θ_p``
+      (``pack_row_panels(..., with_grad=True)``; P indexes
+      ``edge_kernel.param_names()``). The adjoint edge-gradient
+      contraction runs the SAME MXU kernel at rank 2R with the slot
+      operands ``[wg ; w]`` vs ``[w' ; wg']`` (DESIGN.md §7) — exact
+      edge-kernel gradients with A's sparsity, never densified.
 
     Stacked packs (``ops.stack_row_panel_packs``) carry a leading [B]
     axis on every field and feed :func:`xmv_row_panel_batched`. Unlike
@@ -131,6 +145,7 @@ class RowPanelPack(NamedTuple):
     values_w: jnp.ndarray | None
     col: jnp.ndarray
     count: jnp.ndarray
+    values_grad: jnp.ndarray | None = None
 
     @property
     def tile(self) -> int:
@@ -165,8 +180,13 @@ def _row_positions(rows: np.ndarray, nt: int) -> tuple[np.ndarray,
     return counts, pos
 
 
-def pack_octiles(oset: OctileSet, k_max: int | None = None) -> TilePack:
-    """Host-side: bucket an OctileSet's COO list by tile row."""
+def pack_octiles(oset: OctileSet, k_max: int | None = None,
+                 edge_kernel=None) -> TilePack:
+    """Host-side: bucket an OctileSet's COO list by tile row.
+
+    With a feature-expandable ``edge_kernel`` the pack also carries the
+    per-parameter ``values_grad`` derivative operands (see
+    :class:`TilePack`)."""
     t, nt = oset.tile, oset.n_tiles_side
     K_total = oset.coords.shape[0]       # includes padded() slots, if any
     real = oset.coords[:, 0] >= 0        # padded() marks pad slots with -1
@@ -186,14 +206,23 @@ def pack_octiles(oset: OctileSet, k_max: int | None = None) -> TilePack:
         [oset.values_adj, np.zeros((1, t, t), np.float32)], axis=0)
     vals_e = np.concatenate(
         [oset.values_lab, np.zeros((1, t, t), np.float32)], axis=0)
+    vg = None
+    if edge_kernel is not None and edge_kernel.feature_rank() is not None \
+            and edge_kernel.param_names():
+        from repro.core.octile import feature_operands
+        _, wg = feature_operands(vals_a, vals_e, edge_kernel,
+                                 with_grad=True)   # [K+1, P, R, t, t]
+        vg = jnp.asarray(np.asarray(wg, np.float32))
     return TilePack(values_adj=jnp.asarray(vals_a),
                     values_lab=jnp.asarray(vals_e),
-                    slot=jnp.asarray(slot), col=jnp.asarray(col))
+                    slot=jnp.asarray(slot), col=jnp.asarray(col),
+                    values_grad=vg)
 
 
 def pack_row_panels(oset: OctileSet, edge_kernel=None,
                     k_max: int | None = None,
-                    as_numpy: bool = False) -> RowPanelPack:
+                    as_numpy: bool = False,
+                    with_grad: bool = False) -> RowPanelPack:
     """Host-side: lay an OctileSet out as contiguous VMEM-ready row panels.
 
     With ``edge_kernel`` carrying a feature expansion
@@ -201,7 +230,10 @@ def pack_row_panels(oset: OctileSet, edge_kernel=None,
     operands ``w_r = a ∘ f_r(e)`` per octile — loop-invariant across the
     whole CG solve, so weighting at pack time amortizes it over every
     matvec (the same trade the dense low-rank path makes in
-    ``core/mgk.py``).
+    ``core/mgk.py``). ``with_grad`` additionally fills ``values_grad``
+    with the per-parameter derivative operands ``a ∘ ∂f_r(e)/∂θ`` —
+    loop-invariant across the adjoint contraction the same way
+    (DESIGN.md §7).
 
     ``as_numpy`` keeps the fields as host arrays (for caching layers that
     re-pad and stack before the single device transfer).
@@ -223,21 +255,27 @@ def pack_row_panels(oset: OctileSet, edge_kernel=None,
     va[rows, pos] = vals_a
     ve[rows, pos] = vals_e
     col[rows, pos] = cols
-    vw = None
+    vw = vg = None
     if edge_kernel is not None and edge_kernel.feature_rank() is not None:
-        phi = np.asarray(edge_kernel.features(vals_e))     # [K, t, t, R]
-        w = vals_a[..., None] * phi
-        R = w.shape[-1]
-        vw_np = np.zeros((nt, k_max, t, t, R), np.float32)
-        vw_np[rows, pos] = w
-        vw = np.ascontiguousarray(
-            vw_np.transpose(0, 1, 4, 2, 3))                # [nt, k, R, t, t]
+        from repro.core.octile import feature_operands
+        with_grad = with_grad and bool(edge_kernel.param_names())
+        w, wg = feature_operands(vals_a, vals_e, edge_kernel,
+                                 with_grad=with_grad)
+        R = w.shape[-3]
+        vw = np.zeros((nt, k_max, R, t, t), np.float32)
+        vw[rows, pos] = np.asarray(w, np.float32)
+        if wg is not None:
+            P = wg.shape[-4]
+            vg = np.zeros((nt, k_max, P, R, t, t), np.float32)
+            vg[rows, pos] = np.asarray(wg, np.float32)
     dev = (lambda x: x) if as_numpy else jnp.asarray
+    opt = lambda x: None if x is None else dev(x)   # noqa: E731
     return RowPanelPack(values_adj=dev(va),
                         values_lab=dev(ve),
-                        values_w=None if vw is None else dev(vw),
+                        values_w=opt(vw),
                         col=dev(col),
-                        count=dev(counts.astype(np.int32)))
+                        count=dev(counts.astype(np.int32)),
+                        values_grad=opt(vg))
 
 
 def pack_graph(adjacency, edge_labels=None, tile: int = 8,
@@ -250,21 +288,43 @@ def pack_graph(adjacency, edge_labels=None, tile: int = 8,
 
 
 def pack_graph_row_panels(adjacency, edge_labels=None, tile: int = 8,
-                          edge_kernel=None,
-                          k_max: int | None = None) -> RowPanelPack:
+                          edge_kernel=None, k_max: int | None = None,
+                          with_grad: bool = False) -> RowPanelPack:
     """Convenience: dense matrix -> RowPanelPack."""
     return pack_row_panels(
         octile_decompose(np.asarray(adjacency),
                          None if edge_labels is None
                          else np.asarray(edge_labels), tile=tile),
-        edge_kernel=edge_kernel, k_max=k_max)
+        edge_kernel=edge_kernel, k_max=k_max, with_grad=with_grad)
 
 
-def _contrib(a, e, ap, ep, p, edge_kernel, acc_dtype):
+def device_weighted_pack(pack: RowPanelPack, edge_kernel, theta=None,
+                         with_grad: bool = False) -> RowPanelPack:
+    """Recompute a pack's weighted operands ON DEVICE from its structural
+    fields: ``values_w = a ∘ f_r(e; theta)`` (and ``values_grad`` when
+    ``with_grad``). Works on per-graph and stacked ([B]-leading) packs.
+
+    This is how traced hyperparameters reach the MXU contraction mode,
+    whose kernel consumes pre-weighted tiles as plain data: the pack-time
+    host precompute bakes the kernel's static parameter values in, so the
+    differentiable path re-derives the operands from ``values_lab`` once
+    per solve — O(nnz·R) work amortized over every CG iteration, leaving
+    the Pallas kernel untouched (DESIGN.md §7)."""
+    from repro.core.octile import feature_operands
+    w, wg = feature_operands(pack.values_adj, pack.values_lab, edge_kernel,
+                             theta=theta, with_grad=with_grad)
+    return pack._replace(values_w=w, values_grad=wg)
+
+
+def _contrib(a, e, ap, ep, p, edge_kernel, acc_dtype, theta=None):
     """One octile-pair contribution: contract the regenerated [t,t,t,t]
     product-weight block with the [t, t] P block -> [t, t]."""
-    kappa = edge_kernel(e[:, :, None, None],
-                        ep[None, None, :, :]).astype(acc_dtype)
+    if theta is None:
+        kappa = edge_kernel(e[:, :, None, None], ep[None, None, :, :])
+    else:
+        kappa = edge_kernel.apply(e[:, :, None, None],
+                                  ep[None, None, :, :], theta)
+    kappa = kappa.astype(acc_dtype)
     w = a[:, :, None, None] * ap[None, None, :, :] * kappa
     return jnp.sum(w * p[None, :, None, :], axis=(1, 3))
 
@@ -285,7 +345,7 @@ def _mxu_contrib(w, wp, p, acc_dtype):
 
 def _row_panel_kernel(col1, cnt1, col2, cnt2,   # scalar-prefetch refs
                       *refs, edge_kernel, acc_dtype, fused, mxu, batched,
-                      tile, rank):
+                      tile, rank, with_theta):
     """Row-panel kernel body: one grid step OWNS output block (i, i').
 
     Grid layout: (nt, mt) per-pair, (B, nt, mt) batched. Both graphs'
@@ -295,10 +355,20 @@ def _row_panel_kernel(col1, cnt1, col2, cnt2,   # scalar-prefetch refs
     padding slots are never touched. Each output block is written
     exactly once — no cross-step accumulation, no init/epilogue grid
     predicates.
+
+    ``with_theta`` (elementwise mode only): the first regular input is a
+    (1, P) hyperparameter vector and kappa is regenerated through
+    ``edge_kernel.apply`` — traced parameter values reaching a kernel
+    whose edge_kernel is a static jit argument (DESIGN.md §7).
     """
     t = tile
     d = 1 if batched else 0
     i, ip = pl.program_id(d), pl.program_id(d + 1)
+    theta = None
+    if with_theta:
+        from repro.core.base_kernels import unpack_theta
+        t_ref, *refs = refs
+        theta = unpack_theta(edge_kernel, t_ref[0])
     if mxu:
         w1_ref, w2_ref, p_ref = refs[:3]
         rest = refs[3:]
@@ -341,7 +411,7 @@ def _row_panel_kernel(col1, cnt1, col2, cnt2,   # scalar-prefetch refs
             else:
                 contrib = _contrib(a, e, at(a2_ref, kkp).astype(acc_dtype),
                                    at(e2_ref, kkp), pblk, edge_kernel,
-                                   acc_dtype)
+                                   acc_dtype, theta=theta)
             return acc + contrib
 
         return jax.lax.fori_loop(0, nb, inner, acc)
@@ -377,7 +447,7 @@ def _resolve_mode(mode: str, packs1: RowPanelPack,
 
 
 def _row_panel_call(packs1, packs2, P, edge_kernel, diag, interpret,
-                    acc_dtype, mode, batched):
+                    acc_dtype, mode, batched, theta=None):
     t = packs1.tile
     nt, mt = packs1.n_tile_rows, packs2.n_tile_rows
     ka, kb = packs1.k_max, packs2.k_max
@@ -437,6 +507,7 @@ def _row_panel_call(packs1, packs2, P, edge_kernel, diag, interpret,
         grid = (nt, mt)
         out_shape = jax.ShapeDtypeStruct((n, m), P.dtype)
 
+    with_theta = theta is not None and not mxu
     if mxu:
         # [.., nt, ka, R, t, t] -> [.., nt, ka*R, t, t]: slot-major,
         # rank-minor, so slot kk's operands are rows [kk*R, (kk+1)*R)
@@ -452,6 +523,10 @@ def _row_panel_call(packs1, packs2, P, edge_kernel, diag, interpret,
                     panel2((kb, t, t)), panel2((kb, t, t)), p_spec]
         inputs = [packs1.values_adj, packs1.values_lab,
                   packs2.values_adj, packs2.values_lab, P]
+    if with_theta:
+        n_theta = theta.shape[-1]
+        in_specs.insert(0, pl.BlockSpec((1, n_theta), lambda *_: (0, 0)))
+        inputs.insert(0, theta.reshape(1, n_theta))
     if fused:
         in_specs.append(out_spec)
         inputs.append(diag)
@@ -465,7 +540,8 @@ def _row_panel_call(packs1, packs2, P, edge_kernel, diag, interpret,
     return pl.pallas_call(
         functools.partial(_row_panel_kernel, edge_kernel=edge_kernel,
                           acc_dtype=acc_dtype, fused=fused, mxu=mxu,
-                          batched=batched, tile=t, rank=rank),
+                          batched=batched, tile=t, rank=rank,
+                          with_theta=with_theta),
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
@@ -476,7 +552,7 @@ def _row_panel_call(packs1, packs2, P, edge_kernel, diag, interpret,
                                              "acc_dtype", "mode"))
 def xmv_row_panel(pack1: RowPanelPack, pack2: RowPanelPack, P, edge_kernel,
                   *, diag=None, mode: str = "auto", interpret=None,
-                  acc_dtype=jnp.float32):
+                  acc_dtype=jnp.float32, theta=None):
     """y = (A (x) A' .* E (x)k E') P via VMEM-staged row panels (one pair).
 
     ``mode``: "elementwise" (VPU, any edge kernel), "mxu" (low-rank
@@ -484,17 +560,21 @@ def xmv_row_panel(pack1: RowPanelPack, pack2: RowPanelPack, P, edge_kernel,
     (mxu iff both packs carry precomputed weighted tiles).
 
     With ``diag`` ([n, m]) the kernel instead returns the fused CG
-    operator application ``diag * P - y``.
+    operator application ``diag * P - y``. ``theta`` ([P_theta] f32,
+    ``pack_theta`` order) overrides the edge kernel's hyperparameters
+    with traced values on the elementwise path; the MXU path takes its
+    parameters through ``device_weighted_pack`` instead (DESIGN.md §7).
     """
     return _row_panel_call(pack1, pack2, P, edge_kernel, diag, interpret,
-                           acc_dtype, mode, batched=False)
+                           acc_dtype, mode, batched=False, theta=theta)
 
 
 @functools.partial(jax.jit, static_argnames=("edge_kernel", "interpret",
                                              "acc_dtype", "mode"))
 def xmv_row_panel_batched(packs1: RowPanelPack, packs2: RowPanelPack, P,
                           edge_kernel, *, diag=None, mode: str = "auto",
-                          interpret=None, acc_dtype=jnp.float32):
+                          interpret=None, acc_dtype=jnp.float32,
+                          theta=None):
     """Whole-bucket row-panel block-sparse XMV in ONE ``pallas_call``.
 
     ``packs1``/``packs2`` are stacked RowPanelPacks
@@ -505,10 +585,11 @@ def xmv_row_panel_batched(packs1: RowPanelPack, packs2: RowPanelPack, P,
     VMEM-staged tile rows (vs a grid step per slot pair in the legacy
     :func:`xmv_block_sparse_batched`).
 
-    With ``diag`` ([B, n, m]) the fused epilogue emits ``diag * P - y``.
+    With ``diag`` ([B, n, m]) the fused epilogue emits ``diag * P - y``;
+    ``theta`` (shared across the bucket) as in :func:`xmv_row_panel`.
     """
     return _row_panel_call(packs1, packs2, P, edge_kernel, diag, interpret,
-                           acc_dtype, mode, batched=True)
+                           acc_dtype, mode, batched=True, theta=theta)
 
 
 def _kernel(slot_a, col_a, slot_b, col_b,   # scalar-prefetch refs

@@ -32,11 +32,16 @@ from jax.experimental import pallas as pl
 __all__ = ["xmv_dense", "xmv_dense_batched", "pick_tiles"]
 
 
-def _kernel(*refs, edge_kernel, acc_dtype, fused):
+def _kernel(*refs, edge_kernel, acc_dtype, fused, with_theta):
     """One grid step: o[TI, TIP] += contract((A,E) TIxTJ, (A',E') TIPxTJP,
     P TJxTJP). With ``fused``, the last reduction step instead emits the
     whole CG operator application diag*p - y for this output block
-    (DESIGN.md §3)."""
+    (DESIGN.md §3). With ``with_theta`` the first input ref is a (1, P)
+    hyperparameter vector and kappa is regenerated through
+    ``edge_kernel.apply`` — how traced parameter values reach a kernel
+    whose edge_kernel object is a static jit argument (DESIGN.md §7)."""
+    if with_theta:
+        t_ref, *refs = refs
     if fused:
         a_ref, e_ref, ap_ref, ep_ref, p_ref, diag_ref, pe_ref, o_ref = refs
     else:
@@ -54,8 +59,15 @@ def _kernel(*refs, edge_kernel, acc_dtype, fused):
     ep = ep_ref[...]                      # [TIP, TJP]
     p = p_ref[...].astype(acc_dtype)      # [TJ, TJP]
     # regenerate the product-matrix block on the fly: [TI, TJ, TIP, TJP]
-    kappa = edge_kernel(e[:, :, None, None],
-                        ep[None, None, :, :]).astype(acc_dtype)
+    if with_theta:
+        from repro.core.base_kernels import unpack_theta
+        theta = unpack_theta(edge_kernel, t_ref[0])
+        kappa = edge_kernel.apply(e[:, :, None, None],
+                                  ep[None, None, :, :],
+                                  theta).astype(acc_dtype)
+    else:
+        kappa = edge_kernel(e[:, :, None, None],
+                            ep[None, None, :, :]).astype(acc_dtype)
     w = a[:, :, None, None] * ap[None, None, :, :] * kappa
     contrib = jnp.sum(w * p[None, :, None, :], axis=(1, 3))   # [TI, TIP]
 
@@ -116,11 +128,16 @@ def pick_tiles(n: int, m: int) -> tuple[int, int, int, int]:
     jax.jit,
     static_argnames=("edge_kernel", "tiles", "interpret", "acc_dtype"))
 def xmv_dense(A, E, Ap, Ep, P, edge_kernel, *, diag=None, tiles=None,
-              interpret=None, acc_dtype=jnp.float32):
+              interpret=None, acc_dtype=jnp.float32, theta=None):
     """Single-pair on-the-fly XMV. A,E: [n,n]; Ap,Ep: [m,m]; P: [n,m].
 
     With ``diag`` ([n, m]) the fused epilogue emits ``diag * P - y``
-    in-kernel — the full CG operator application with no extra XLA op."""
+    in-kernel — the full CG operator application with no extra XLA op.
+
+    ``theta`` ([P_theta] f32, ``core.base_kernels.pack_theta`` order)
+    overrides the edge kernel's hyperparameters with traced values — the
+    differentiable-MGK path (DESIGN.md §7). It rides as a tiny VMEM
+    input, so one compiled kernel serves every parameter value."""
     n, m = A.shape[0], Ap.shape[0]
     if tiles is None:
         tiles = pick_tiles(n, m)
@@ -130,6 +147,7 @@ def xmv_dense(A, E, Ap, Ep, P, edge_kernel, *, diag=None, tiles=None,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     fused = diag is not None
+    with_theta = theta is not None
     grid = (n // ti, m // tip, n // tj, m // tjp)
     in_specs = [
         pl.BlockSpec((ti, tj), lambda i, k, j, l: (i, j)),
@@ -139,13 +157,19 @@ def xmv_dense(A, E, Ap, Ep, P, edge_kernel, *, diag=None, tiles=None,
         pl.BlockSpec((tj, tjp), lambda i, k, j, l: (j, l)),
     ]
     inputs = [A, E, Ap, Ep, P]
+    if with_theta:
+        n_theta = theta.shape[-1]
+        in_specs.insert(0, pl.BlockSpec((1, n_theta),
+                                        lambda i, k, j, l: (0, 0)))
+        inputs.insert(0, theta.reshape(1, n_theta))
     if fused:
         in_specs += [pl.BlockSpec((ti, tip), lambda i, k, j, l: (i, k)),
                      pl.BlockSpec((ti, tip), lambda i, k, j, l: (i, k))]
         inputs += [diag, P]
     out = pl.pallas_call(
         functools.partial(_kernel, edge_kernel=edge_kernel,
-                          acc_dtype=acc_dtype, fused=fused),
+                          acc_dtype=acc_dtype, fused=fused,
+                          with_theta=with_theta),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((ti, tip), lambda i, k, j, l: (i, k)),
@@ -156,14 +180,18 @@ def xmv_dense(A, E, Ap, Ep, P, edge_kernel, *, diag=None, tiles=None,
 
 
 def xmv_dense_batched(A, E, Ap, Ep, P, edge_kernel, *, diag=None,
-                      tiles=None, interpret=None):
+                      tiles=None, interpret=None, theta=None):
     """Batched over pairs: leading axis B on every operand (the TPU
     analogue of 'many graph pairs per kernel launch', paper Sec. V).
-    ``diag`` ([B, n, m], optional) selects the fused-epilogue kernel."""
+    ``diag`` ([B, n, m], optional) selects the fused-epilogue kernel;
+    ``theta`` ([P_theta], optional, shared across the batch) the traced
+    edge-hyperparameter override."""
     fn = functools.partial(xmv_dense, edge_kernel=edge_kernel, tiles=tiles,
                            interpret=interpret)
     if diag is None:
-        return jax.vmap(lambda a, e, ap, ep, p: fn(a, e, ap, ep, p))(
+        return jax.vmap(lambda a, e, ap, ep, p: fn(a, e, ap, ep, p,
+                                                   theta=theta))(
             A, E, Ap, Ep, P)
-    return jax.vmap(lambda a, e, ap, ep, p, d: fn(a, e, ap, ep, p, diag=d))(
+    return jax.vmap(lambda a, e, ap, ep, p, d: fn(a, e, ap, ep, p, diag=d,
+                                                  theta=theta))(
         A, E, Ap, Ep, P, diag)

@@ -1,12 +1,21 @@
-"""Step builders: train (loss + grad + optimizer), prefill, decode.
+"""Step builders: train (loss + grad + optimizer), prefill, decode —
+plus the graph-kernel learning steps (GP hyperparameter optimization on
+the differentiable MGK, DESIGN.md §7).
 
-These are what the launcher jits with the mesh shardings and what the
-dry-run lowers for every (arch x shape) cell.
+The LM builders are what the launcher jits with the mesh shardings and
+what the dry-run lowers for every (arch x shape) cell. The GP builders
+are what examples/gp_fit.py drives: the loss is the GP negative log
+marginal likelihood of a bucketed graph dataset, whose gradient flows
+through the adjoint-PCG custom VJP of core/adjoint.py — cholesky and
+Gram assembly differentiate natively, only the solve needed a custom
+rule.
 """
 from __future__ import annotations
 
 import functools
 from typing import Any, Callable
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +25,8 @@ from repro.models.model import decode_step, forward, mtp_logits
 from .optimizer import make_optimizer
 
 __all__ = ["loss_fn", "make_train_step", "make_prefill_step",
-           "make_decode_step"]
+           "make_decode_step", "make_gp_nlml", "make_gp_step",
+           "DEFAULT_THETA_BOUNDS"]
 
 AUX_LOSS_COEF = 0.01
 MTP_LOSS_COEF = 0.3
@@ -92,6 +102,124 @@ def make_train_step(cfg: ModelConfig, *, lr: float = 3e-4,
         return new_params, new_opt, metrics
 
     return opt_init, step
+
+
+# -- graph-kernel learning steps (differentiable MGK, DESIGN.md §7) -------
+
+# hyperparameters live in constrained domains (kappa must stay PD with
+# range in (0, 1]; q is a probability); plain gradient steps are
+# projected back in after each update
+DEFAULT_THETA_BOUNDS = {
+    "vertex.h": (1e-3, 0.999),
+    "edge.h": (1e-3, 0.999),
+    "edge.alpha": (1e-2, 50.0),
+    "vertex.alpha": (1e-2, 50.0),
+    "edge.support": (1e-2, 10.0),
+    "vertex.support": (1e-2, 10.0),
+    "edge.value": (1e-3, 1.0),
+    "vertex.value": (1e-3, 1.0),
+    "q": (1e-3, 0.9),
+}
+
+
+def _clip_theta(theta: dict, bounds: dict) -> dict:
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            return {k: walk(f"{prefix}.{k}" if prefix else k, v)
+                    for k, v in node.items()}
+        lohi = bounds.get(prefix)
+        if lohi is None:
+            return node
+        return jnp.clip(node, lohi[0], lohi[1])
+
+    return walk("", theta)
+
+
+def make_gp_nlml(ds, y, vertex_kernel, edge_kernel, *,
+                 method: str = "lowrank", noise: float = 1e-4,
+                 tol: float = 1e-10, max_iter: int = 512,
+                 fixed_iters: int | None = None,
+                 pcg_variant: str = "classic") -> Callable:
+    """Build ``nlml(theta) -> scalar`` over a BucketedDataset.
+
+    All (i <= j) pairs are grouped by (bucket_i, bucket_j) into aligned
+    pair batches — each group gets ONE adjoint-differentiable value
+    function (core/adjoint.py), built once and reused across every
+    optimization step — and the assembled Gram feeds the standard GP
+    negative log marginal likelihood
+
+        NLML = y^T (K + σ²I)^{-1} y / 2 + log det(K + σ²I) / 2 + const.
+
+    ``theta`` is the :func:`repro.core.adjoint.kernel_theta` pytree;
+    gradients w.r.t. every hyperparameter (q included) flow through
+    cholesky/assembly natively and through each MGK solve via its
+    custom VJP — two PCG solves per pair batch per step, regardless of
+    the number of hyperparameters.
+    """
+    from repro.core.adjoint import mgk_value_fn
+    N = len(ds)
+    y = jnp.asarray(y, jnp.float32)
+    iu, ju = np.triu_indices(N)
+    groups: dict[tuple[int, int], list[int]] = {}
+    for k in range(len(iu)):
+        key = (ds.bucket_of(int(iu[k])), ds.bucket_of(int(ju[k])))
+        groups.setdefault(key, []).append(k)
+    fns = []
+    for (bi, bj), ks in groups.items():
+        rows = [int(iu[k]) for k in ks]
+        cols = [int(ju[k]) for k in ks]
+        g1 = ds.batch(rows, pad_to=ds.buckets[bi].pad_to)
+        g2 = ds.batch(cols, pad_to=ds.buckets[bj].pad_to)
+        fn = mgk_value_fn(g1, g2, vertex_kernel, edge_kernel,
+                          method=method, tol=tol, max_iter=max_iter,
+                          fixed_iters=fixed_iters,
+                          pcg_variant=pcg_variant)
+        fns.append((np.array(rows), np.array(cols), fn))
+
+    def nlml(theta):
+        K = jnp.zeros((N, N), jnp.float32)
+        for rows, cols, fn in fns:
+            vals = fn(theta)
+            K = K.at[rows, cols].set(vals)
+        # values land on the upper triangle (rows <= cols); mirror it
+        K = jnp.triu(K) + jnp.triu(K, 1).T
+        Kn = K + noise * jnp.eye(N, dtype=K.dtype)
+        L = jnp.linalg.cholesky(Kn)
+        alpha = jax.scipy.linalg.cho_solve((L, True), y)
+        return (0.5 * jnp.dot(y, alpha)
+                + jnp.sum(jnp.log(jnp.diag(L)))
+                + 0.5 * N * jnp.log(2.0 * jnp.pi))
+
+    return nlml
+
+
+def make_gp_step(nlml: Callable, *, optimizer: str = "adamw",
+                 lr: float = 5e-2, bounds: dict | None = None
+                 ) -> tuple[Callable, Callable]:
+    """Returns (init_fn(theta) -> opt_state, step_fn) for GP
+    hyperparameter optimization:
+
+        step_fn(theta, opt_state) -> (theta', opt_state', loss)
+
+    Each step is loss + gradient (via the adjoint custom VJP inside
+    ``nlml``) + one optimizer update, with the result projected into
+    ``bounds`` (:data:`DEFAULT_THETA_BOUNDS` keyed by flat theta path)
+    to keep the base kernels positive definite."""
+    bounds = DEFAULT_THETA_BOUNDS if bounds is None else bounds
+    opt_init, opt_update = make_optimizer(optimizer, lr=lr,
+                                          weight_decay=0.0)
+    vg = jax.value_and_grad(nlml)
+
+    def init(theta):
+        theta = jax.tree.map(lambda v: jnp.asarray(v, jnp.float32), theta)
+        return theta, opt_init(theta)
+
+    def step(theta, opt_state):
+        loss, grads = vg(theta)
+        theta, opt_state = opt_update(grads, opt_state, theta)
+        return _clip_theta(theta, bounds), opt_state, loss
+
+    return init, step
 
 
 def make_prefill_step(cfg: ModelConfig) -> Callable:

@@ -10,6 +10,21 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
+# Hypothesis profiles (no-op on minimal installs, where the
+# _hypothesis_compat shim runs a fixed grid instead): "ci" is fully
+# deterministic — derandomized, fixed seed, modest example count — so CI
+# failures reproduce; "dev" explores more. Select with
+# HYPOTHESIS_PROFILE=ci (the workflow does) or fall back to "dev".
+try:  # noqa: SIM105
+    from hypothesis import settings as _hsettings
+
+    _hsettings.register_profile("ci", max_examples=25, derandomize=True,
+                                deadline=None, print_blob=True)
+    _hsettings.register_profile("dev", max_examples=100, deadline=None)
+    _hsettings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ImportError:
+    pass
+
 
 @pytest.fixture
 def rng():

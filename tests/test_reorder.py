@@ -68,3 +68,58 @@ def test_best_order_never_worse_than_natural(rng):
     g, coords = pdb_like_graph(100, rng=rng)
     _, name, score = best_order(g.adjacency, coords=coords)
     assert score <= count_nonempty_tiles(g.adjacency)
+
+
+# -- property-based invariants (seeded hypothesis profile, conftest) -------
+
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+
+def _random_graph(n: int, density: float, seed: int) -> np.ndarray:
+    r = np.random.default_rng(seed)
+    a = (r.random((n, n)) < density).astype(np.float32)
+    a = np.triu(a, 1)
+    a = a + a.T
+    return a
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 60), density=st.floats(0.02, 0.4),
+       seed=st.integers(0, 10))
+def test_orders_always_valid_permutations(n, density, seed):
+    """rcm_order / pbr_order must return a bijection on [0, n) for ANY
+    graph — disconnected, empty, dense — and morton_order for any point
+    cloud; a broken permutation silently corrupts every pack downstream."""
+    a = _random_graph(n, density, seed)
+    want = list(range(n))
+    assert sorted(rcm_order(a).tolist()) == want
+    assert sorted(pbr_order(a).tolist()) == want
+    coords = np.random.default_rng(seed).random((n, 3))
+    assert sorted(morton_order(coords).tolist()) == want
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 64), density=st.floats(0.02, 0.3),
+       seed=st.integers(0, 10))
+def test_pbr_never_worse_than_identity(n, density, seed):
+    """PBR keeps the identity permutation as a zeroth candidate, so its
+    tile count can never exceed the natural ordering's (the invariant
+    that makes it safe to apply unconditionally in the pipeline)."""
+    a = _random_graph(n, density, seed)
+    base = count_nonempty_tiles(a)
+    p = pbr_order(a)
+    assert count_nonempty_tiles(a[np.ix_(p, p)]) <= base
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(8, 48), seed=st.integers(0, 6))
+def test_pbr_valid_on_edgeless_and_complete(n, seed):
+    """Degenerate extremes: no edges (nothing to cut) and the complete
+    graph (nothing to gain) must both yield valid permutations with
+    tile count equal to the identity's."""
+    for a in (np.zeros((n, n), np.float32),
+              (np.ones((n, n)) - np.eye(n)).astype(np.float32)):
+        p = pbr_order(a)
+        assert sorted(p.tolist()) == list(range(n))
+        assert count_nonempty_tiles(a[np.ix_(p, p)]) == \
+            count_nonempty_tiles(a)

@@ -30,11 +30,13 @@ def main(argv=None) -> None:
         primitives.run(sizes=(32,))
         xmv_bench.run(sizes=(2, 8), pad_to=32, iters=3, tiles=(8, 16, 32),
                       tile_B=2)
+        xmv_bench.run_gram(shapes=((2, 2), (4, 4)), iters=3)
         return
     from . import primitives, reorder_bench, adaptive, incremental, \
         packages, roofline
     primitives.run()          # paper Fig. 5 / Table I
     xmv_bench.run()           # PR 1: batched-grid + fused + pipelined CG
+    xmv_bench.run_gram()      # PR 4: Gram-tile kernel + segmented PCG
     reorder_bench.run()       # paper Figs. 6-7
     adaptive.run()            # paper Fig. 8
     incremental.run()         # paper Fig. 9

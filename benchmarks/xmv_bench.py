@@ -1,4 +1,4 @@
-"""PR 1/2 perf tracking: the CG hot-path before/after comparison.
+"""PR 1/2/4 perf tracking: the CG hot-path before/after comparison.
 
 Emits ``BENCH_xmv.json`` with
 
@@ -42,16 +42,17 @@ import json
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.base_kernels import KroneckerDelta, SquareExponential
 from repro.core.graph import batch_from_graphs
-from repro.core.mgk import mgk_pairs_sparse
+from repro.core.mgk import mgk_pairs_sparse, mgk_pairs_sparse_segmented
 from repro.data import make_drugbank_like_dataset
 from repro.kernels.ops import packs_for_batch, row_panel_packs_for_batch, \
     xmv_block_sparse_unrolled
 from repro.kernels.xmv_block_sparse import xmv_block_sparse_batched, \
-    xmv_row_panel_batched
+    xmv_gram_tile, xmv_row_panel_batched
 from repro.kernels.xmv_dense import xmv_dense_batched
 from .common import row, time_fn
 
@@ -230,5 +231,115 @@ def run(out_path: str = "BENCH_xmv.json", sizes=(2, 8, 16),
     return report
 
 
+def _gram_batches(Bi: int, Bj: int, pad_to: int, seed: int = 7):
+    """(row-axis batch [Bi], col-axis batch [Bj], flattened pair
+    batches [Bi*Bj] in row-major pair order)."""
+    g1u, g2u = _bucket(max(Bi, Bj), pad_to, seed=seed)
+    g1u = jax.tree.map(lambda x: x[:Bi], g1u)
+    g2u = jax.tree.map(lambda x: x[:Bj], g2u)
+    rep = lambda x: jnp.repeat(x, Bj, axis=0)                   # noqa
+    til = lambda x: jnp.tile(x, (Bi,) + (1,) * (x.ndim - 1))    # noqa
+    return g1u, g2u, jax.tree.map(rep, g1u), jax.tree.map(til, g2u)
+
+
+def run_gram(out_path: str = "BENCH_gram.json",
+             shapes=((2, 2), (4, 4), (8, 8)), pad_to: int = 32,
+             iters: int = 5, segment_size: int = 4) -> dict:
+    """PR 4: Gram-tile hot path vs stacked per-pair row-panel, plus
+    convergence-segmented PCG vs masked lockstep.
+
+    Per I x J Gram-tile shape:
+
+    * per-matvec wall time of ``xmv_gram_tile`` (ONE pack per axis,
+      (Bi, nt, Bj) grid, in-kernel output-column loop) against
+      ``xmv_row_panel_batched`` over per-pair stacked packs (the PR-2
+      production kernel) — both modes. On this interpret harness the
+      win is the mt-fold grid-step reduction; on hardware it is that
+      plus each row graph's panels fetched once per tile row instead of
+      once per (pair, tile row).
+    * matvecs-per-solve: total pair-matvec evaluations of the segmented
+      solve (pairs RETIRE between segments) vs masked lockstep (every
+      pair rides to the last pair's convergence), at identical final
+      residuals.
+    """
+    rng = np.random.default_rng(0)
+    report: dict = {"gram_tile": [], "segmented_pcg": []}
+    for (Bi, Bj) in shapes:
+        g1u, g2u, g1f, g2f = _gram_batches(Bi, Bj, pad_to)
+        n = g1u.adjacency.shape[1]
+        m = g2u.adjacency.shape[1]
+        P4 = jnp.asarray(rng.random((Bi, Bj, n, m)).astype(np.float32))
+        Pf = P4.reshape(Bi * Bj, n, m)
+        # per-axis packs (Bi + Bj) vs per-pair stacked packs (Bi*Bj)
+        a1 = row_panel_packs_for_batch(g1u)
+        a2 = row_panel_packs_for_batch(g2u)
+        a1w = row_panel_packs_for_batch(g1u, edge_kernel=EK)
+        a2w = row_panel_packs_for_batch(g2u, edge_kernel=EK)
+        p1 = row_panel_packs_for_batch(g1f)
+        p2 = row_panel_packs_for_batch(g2f)
+        p1w = row_panel_packs_for_batch(g1f, edge_kernel=EK)
+        p2w = row_panel_packs_for_batch(g2f, edge_kernel=EK)
+        entry = {"Bi": Bi, "Bj": Bj, "n": n, "tile": 8}
+        entry["us_per_matvec_per_pair"] = time_fn(
+            lambda P: xmv_row_panel_batched(p1, p2, P, EK,
+                                            mode="elementwise"),
+            Pf, iters=iters)
+        entry["us_per_matvec_gram_tile"] = time_fn(
+            lambda P: xmv_gram_tile(a1, a2, P, EK, mode="elementwise"),
+            P4, iters=iters)
+        entry["us_per_matvec_per_pair_mxu"] = time_fn(
+            lambda P: xmv_row_panel_batched(p1w, p2w, P, EK, mode="mxu"),
+            Pf, iters=iters)
+        entry["us_per_matvec_gram_tile_mxu"] = time_fn(
+            lambda P: xmv_gram_tile(a1w, a2w, P, EK, mode="mxu"),
+            P4, iters=iters)
+        entry["speedup_gram_tile_vs_per_pair"] = \
+            entry["us_per_matvec_per_pair"] / max(
+                entry["us_per_matvec_gram_tile"], 1e-9)
+        entry["speedup_gram_tile_vs_per_pair_mxu"] = \
+            entry["us_per_matvec_per_pair_mxu"] / max(
+                entry["us_per_matvec_gram_tile_mxu"], 1e-9)
+        report["gram_tile"].append(entry)
+        row(f"xmv_gram_tile_{Bi}x{Bj}", entry["us_per_matvec_gram_tile"],
+            f"vs-per-pair={entry['speedup_gram_tile_vs_per_pair']:.2f}x")
+        row(f"xmv_gram_tile_mxu_{Bi}x{Bj}",
+            entry["us_per_matvec_gram_tile_mxu"],
+            f"vs-per-pair="
+            f"{entry['speedup_gram_tile_vs_per_pair_mxu']:.2f}x")
+
+        # segmented PCG vs masked lockstep on the same Gram tile (a
+        # mixed-convergence bucket: iteration counts vary per pair)
+        lock = mgk_pairs_sparse(g1f, g2f, a1w, a2w, VK, EK, tol=1e-10,
+                                gram_tile=(Bi, Bj))
+        seg = mgk_pairs_sparse_segmented(
+            g1f, g2f, a1w, a2w, VK, EK, tol=1e-10,
+            segment_size=segment_size, gram_tile=(Bi, Bj))
+        its = np.asarray(lock.iterations)
+        seg_entry = {
+            "Bi": Bi, "Bj": Bj, "segment_size": segment_size,
+            "matvec_pairs_lockstep": int(lock.matvec_pairs),
+            "matvec_pairs_segmented": int(seg.matvec_pairs),
+            "iterations_min": int(its.min()),
+            "iterations_max": int(its.max()),
+            "iterations_match": bool(np.array_equal(
+                its, np.asarray(seg.iterations))),
+            "values_max_rel_err": float(np.max(np.abs(
+                (np.asarray(seg.values) - np.asarray(lock.values))
+                / np.maximum(np.abs(np.asarray(lock.values)), 1e-30)))),
+            "savings": 1.0 - int(seg.matvec_pairs)
+            / max(int(lock.matvec_pairs), 1),
+        }
+        report["segmented_pcg"].append(seg_entry)
+        row(f"pcg_segmented_{Bi}x{Bj}",
+            float(seg_entry["matvec_pairs_segmented"]),
+            f"lockstep={seg_entry['matvec_pairs_lockstep']}"
+            f",savings={seg_entry['savings']:.1%}")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {out_path}", flush=True)
+    return report
+
+
 if __name__ == "__main__":
     run()
+    run_gram()

@@ -19,11 +19,12 @@ from .base_kernels import (BaseKernel, CompactPolynomial, Constant,
 from .graph import Graph, GraphBatch, batch_from_graphs, pad_graphs
 from .mgk import MGKResult, ProductSystem, adaptive_route, \
     build_product_system, mgk_adaptive, mgk_pairs, mgk_pairs_sparse, \
-    mgk_single
+    mgk_pairs_sparse_segmented, mgk_single
 from .octile import (OctileSet, count_nonempty_tiles, expand_octiles,
                      feature_operands, octile_decompose,
                      tile_occupancy_histogram)
-from .pcg import PCGResult, adjoint_solve, pcg_solve
+from .pcg import PCGResult, adjoint_solve, pcg_solve, \
+    pcg_solve_segmented
 from .reorder import best_order, morton_order, pbr_order, rcm_order
 
 __all__ = [
@@ -31,10 +32,11 @@ __all__ = [
     "SquareExponential", "ParamDerivative", "pack_theta", "unpack_theta",
     "Graph", "GraphBatch", "batch_from_graphs",
     "pad_graphs", "MGKResult", "ProductSystem", "build_product_system",
-    "mgk_pairs", "mgk_single", "mgk_pairs_sparse", "mgk_adaptive",
+    "mgk_pairs", "mgk_single", "mgk_pairs_sparse",
+    "mgk_pairs_sparse_segmented", "mgk_adaptive",
     "adaptive_route", "OctileSet", "count_nonempty_tiles",
     "expand_octiles", "octile_decompose", "tile_occupancy_histogram",
-    "feature_operands", "PCGResult", "pcg_solve", "adjoint_solve",
+    "feature_operands", "PCGResult", "pcg_solve", "pcg_solve_segmented", "adjoint_solve",
     "best_order", "morton_order", "pbr_order", "rcm_order",
     "kernel_theta", "mgk_value_fn", "mgk_pairs_value_and_grad",
     "mgk_pairs_sparse_value_and_grad", "mgk_adaptive_value_and_grad",

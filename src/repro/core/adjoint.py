@@ -111,6 +111,7 @@ def mgk_value_fn(
     fixed_iters: int | None = None,
     pcg_variant: str = "classic",
     trust_pack_weights: bool = False,
+    gram_tile: tuple[int, int] | None = None,
 ) -> Callable:
     """Build ``value(theta) -> [B]`` for aligned pair batches, wrapped in
     the adjoint-solve ``jax.custom_vjp``.
@@ -120,6 +121,10 @@ def mgk_value_fn(
     stacked row-panel ``packs1``/``packs2`` (+ ``sparse_mode``, as in
     :func:`~repro.core.mgk.mgk_pairs_sparse`; the legacy TilePack packs
     carry no in-kernel theta path and are not supported here).
+    ``gram_tile=(Bi, Bj)``: the packs are PER-AXIS and both the forward
+    and adjoint solves — plus the edge-gradient contraction — run on the
+    single-launch Gram-tile kernel (g1/g2 stay the row-major
+    pair-flattened batches, as in ``mgk_pairs_sparse``).
 
     ``trust_pack_weights``: use the packs' host-precomputed ``values_w``
     / ``values_grad`` buffers instead of re-deriving them on device from
@@ -156,7 +161,7 @@ def mgk_value_fn(
         if sparse:
             return _make_sparse_matvec(sys_, packs1, packs2, edge_kernel,
                                        sparse_mode, (B, n, m),
-                                       theta_e=te_mv)
+                                       theta_e=te_mv, gram_tile=gram_tile)
         return _make_matvec(g1, g2, sys_, edge_kernel, method, chunk,
                             theta_e=te_mv)
 
@@ -188,7 +193,7 @@ def mgk_value_fn(
                                            and have_w)
             if mxu:
                 from repro.kernels.ops import device_weighted_pack, \
-                    xmv_row_panel_batched
+                    xmv_gram_tile, xmv_row_panel_batched
                 if trust_pack_weights and packs1.values_grad is not None \
                         and packs2.values_grad is not None:
                     p1, p2 = packs1, packs2
@@ -213,14 +218,21 @@ def mgk_value_fn(
                         values_w=jnp.concatenate([p2.values_w, wg2],
                                                  axis=-3),
                         values_grad=None)
-                    y = xmv_row_panel_batched(c1, c2, x_mat, edge_kernel,
-                                              mode="mxu")
+                    if gram_tile is not None:
+                        Bi, Bj = gram_tile
+                        y = xmv_gram_tile(
+                            c1, c2, x_mat.reshape(Bi, Bj, n, m),
+                            edge_kernel, mode="mxu")
+                    else:
+                        y = xmv_row_panel_batched(c1, c2, x_mat,
+                                                  edge_kernel, mode="mxu")
                     out[name] = y.reshape(B, -1)
                 return out
             x_flat = x_mat.reshape(B, -1)
             return {name: _make_sparse_matvec(
                 None, packs1, packs2, ParamDerivative(edge_kernel, name),
-                "elementwise", (B, n, m), theta_e=te, raw=True)(x_flat)
+                "elementwise", (B, n, m), theta_e=te, raw=True,
+                gram_tile=gram_tile)(x_flat)
                 for name in names}
         if method == "lowrank":
             wo = lambda a, e: weighted_operands(a, e, edge_kernel,  # noqa

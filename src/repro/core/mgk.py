@@ -29,12 +29,13 @@ import jax.numpy as jnp
 
 from .base_kernels import BaseKernel, Constant
 from .graph import GraphBatch
-from .pcg import PCGResult, pcg_solve
+from .pcg import PCGResult, pcg_solve, pcg_solve_segmented
 from .xmv import xmv_elementwise, xmv_full, xmv_lowrank_precomputed, \
     weighted_operands
 
 __all__ = ["MGKResult", "mgk_pairs", "mgk_single", "ProductSystem",
-           "build_product_system", "mgk_pairs_sparse", "mgk_adaptive",
+           "build_product_system", "mgk_pairs_sparse",
+           "mgk_pairs_sparse_segmented", "mgk_adaptive",
            "adaptive_route", "stop_prob_override"]
 
 
@@ -52,6 +53,9 @@ class MGKResult(NamedTuple):
     iterations: jnp.ndarray   # [B] CG iterations
     converged: jnp.ndarray    # [B]
     nodal: jnp.ndarray | None  # [B, n, m] node-wise similarity (V_x r_inf)
+    # scalar: total pair-matvec evaluations of the solve (PCGResult
+    # passthrough) — the segmented-vs-lockstep work metric (DESIGN.md §8)
+    matvec_pairs: jnp.ndarray | None = None
 
 
 def _outer_flat(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -163,9 +167,17 @@ def _make_matvec(g1: GraphBatch, g2: GraphBatch, sys_: ProductSystem,
 def _make_sparse_matvec(sys_: ProductSystem, packs1, packs2,
                         edge_kernel: BaseKernel, sparse_mode: str,
                         shape: tuple[int, int, int],
-                        theta_e=None, raw: bool = False):
+                        theta_e=None, raw: bool = False,
+                        gram_tile: tuple[int, int] | None = None):
     """Block-sparse analogue of :func:`_make_matvec` over stacked packs
     (RowPanelPack -> row-panel kernel, TilePack -> legacy batched grid).
+
+    With ``gram_tile=(Bi, Bj)`` the packs are PER-AXIS instead of
+    per-pair — ``packs1`` holds the Bi row graphs, ``packs2`` the Bj
+    column graphs — and the whole B = Bi*Bj cross-product matvec runs
+    as ONE ``xmv_gram_tile`` launch (pair b = bi*Bj + bj, row-major;
+    DESIGN.md §8). The [B, n*m] vector contract is unchanged, so the
+    PCG solvers and the adjoint path dispatch to it unmodified.
 
     With ``theta_e``, traced edge hyperparameters reach the kernels two
     ways (DESIGN.md §7): the elementwise mode takes a packed theta
@@ -175,13 +187,15 @@ def _make_sparse_matvec(sys_: ProductSystem, packs1, packs2,
     weights and ``theta_e`` is None, in which case the pack-time host
     precompute is trusted as-is."""
     from repro.kernels.ops import RowPanelPack, device_weighted_pack, \
-        xmv_block_sparse_batched, xmv_row_panel_batched
+        xmv_block_sparse_batched, xmv_gram_tile, xmv_row_panel_batched
     from .base_kernels import pack_theta
 
     B, n, m = shape
     diag = None if raw else sys_.dx / sys_.vx
-    diag_nm = None if raw else diag.reshape(B, n, m)
     row_panel = isinstance(packs1, RowPanelPack)
+    if gram_tile is not None and not row_panel:
+        raise ValueError("gram_tile needs RowPanelPack per-axis packs"
+                         " (legacy TilePacks have no Gram-tile kernel)")
     tvec = None
     if row_panel:
         have_w = packs1.values_w is not None and \
@@ -199,6 +213,22 @@ def _make_sparse_matvec(sys_: ProductSystem, packs1, packs2,
         if not mxu and theta_e is not None:
             tvec = pack_theta(edge_kernel, theta_e)
         mode = "mxu" if mxu else "elementwise"
+
+    if gram_tile is not None:
+        Bi, Bj = gram_tile
+        if Bi * Bj != B:
+            raise ValueError(
+                f"gram_tile {gram_tile} inconsistent with batch {B}")
+        diag_t = None if raw else diag.reshape(Bi, Bj, n, m)
+
+        def matvec(p_vec):
+            P = p_vec.reshape(Bi, Bj, n, m)
+            out = xmv_gram_tile(packs1, packs2, P, edge_kernel,
+                                diag=diag_t, mode=mode, theta=tvec)
+            return out.reshape(B, -1)
+        return matvec
+
+    diag_nm = None if raw else diag.reshape(B, n, m)
 
     def matvec(p_vec):
         # with diag: the fused in-kernel epilogue emits diag*p - y (the
@@ -250,7 +280,8 @@ def mgk_pairs(
         m = g2.adjacency.shape[1]
         nodal = sol.x.reshape(B, n, m)
     return MGKResult(values=values, iterations=sol.iterations,
-                     converged=sol.converged, nodal=nodal)
+                     converged=sol.converged, nodal=nodal,
+                     matvec_pairs=sol.matvec_pairs)
 
 
 def mgk_single(g1: GraphBatch, g2: GraphBatch, **kw) -> MGKResult:
@@ -348,7 +379,7 @@ def mgk_adaptive(g1: GraphBatch, g2: GraphBatch,
     jax.jit,
     static_argnames=("vertex_kernel", "edge_kernel", "max_iter",
                      "return_nodal", "fixed_iters", "pcg_variant",
-                     "sparse_mode"))
+                     "sparse_mode", "gram_tile"))
 def mgk_pairs_sparse(
     g1: GraphBatch,
     g2: GraphBatch,
@@ -363,6 +394,7 @@ def mgk_pairs_sparse(
     return_nodal: bool = False,
     fixed_iters: int | None = None,
     pcg_variant: str = "classic",
+    gram_tile: tuple[int, int] | None = None,
 ) -> MGKResult:
     """Block-sparse-octile variant of mgk_pairs (paper Sec. IV).
 
@@ -377,13 +409,21 @@ def mgk_pairs_sparse(
     stacked legacy TilePacks run the unrolled-grid baseline. Either way
     the whole bucket's matvec is ONE ``pallas_call`` with the diagonal
     epilogue fused in-kernel (DESIGN.md §3); shares mgk_pairs'
-    ``fixed_iters``/``pcg_variant`` contract."""
+    ``fixed_iters``/``pcg_variant`` contract.
+
+    ``gram_tile=(Bi, Bj)`` switches to Gram-tile execution (DESIGN.md
+    §8): ``packs1``/``packs2`` are then PER-AXIS row-panel packs (Bi row
+    graphs / Bj column graphs) while ``g1``/``g2`` stay the row-major
+    pair-flattened batches of all B = Bi*Bj cross pairs — each matvec is
+    one ``xmv_gram_tile`` launch reusing every row graph's panels across
+    its Bj partners."""
     sys_ = build_product_system(g1, g2, vertex_kernel)
     B, n = g1.adjacency.shape[0], g1.adjacency.shape[1]
     m = g2.adjacency.shape[1]
     diag = sys_.dx / sys_.vx
     matvec = _make_sparse_matvec(sys_, packs1, packs2, edge_kernel,
-                                 sparse_mode, (B, n, m))
+                                 sparse_mode, (B, n, m),
+                                 gram_tile=gram_tile)
 
     rhs = sys_.dx * sys_.qx
     sol = pcg_solve(matvec, rhs, diag, tol=tol, max_iter=max_iter,
@@ -391,4 +431,78 @@ def mgk_pairs_sparse(
     values = jnp.sum(sys_.px * sol.x, axis=-1)
     nodal = sol.x.reshape(B, n, m) if return_nodal else None
     return MGKResult(values=values, iterations=sol.iterations,
-                     converged=sol.converged, nodal=nodal)
+                     converged=sol.converged, nodal=nodal,
+                     matvec_pairs=sol.matvec_pairs)
+
+
+def mgk_pairs_sparse_segmented(
+    g1: GraphBatch,
+    g2: GraphBatch,
+    packs1,                      # stacked (or per-axis) RowPanelPack
+    packs2,
+    vertex_kernel: BaseKernel = Constant(1.0),
+    edge_kernel: BaseKernel = Constant(1.0),
+    *,
+    sparse_mode: str = "auto",
+    tol: float = 1e-10,
+    max_iter: int = 512,
+    segment_size: int = 32,
+    pad_multiple: int = 1,
+    pcg_variant: str = "classic",
+    gram_tile: tuple[int, int] | None = None,
+    return_nodal: bool = False,
+) -> MGKResult:
+    """:func:`mgk_pairs_sparse` solved with convergence-segmented PCG
+    (``core/pcg.py:pcg_solve_segmented``, DESIGN.md §8): the solve runs
+    in ``segment_size``-iteration scans and, between segments, pairs
+    that converged RETIRE — the matvec batch is compacted by a
+    gather/scatter remap of the packs and diagonal terms, so retired
+    pairs stop paying matvecs instead of riding along masked.
+
+    Host-driven (each segment is one compiled scan; this entry point
+    itself is NOT jittable). With ``gram_tile=(Bi, Bj)`` the FULL
+    rectangle runs the single-launch Gram-tile kernel; once pairs
+    retire, the surviving (irregular) live set re-gathers per-pair packs
+    from the per-axis packs and continues on the per-pair row-panel
+    kernel — the usual tail is a handful of slow pairs, exactly where
+    per-pair granularity is the right shape. Iterates agree with masked
+    lockstep pair-for-pair; ``matvec_pairs`` is strictly smaller
+    whenever any pair converges a segment early."""
+    from repro.kernels.ops import take_row_panel_pack
+
+    sys_ = build_product_system(g1, g2, vertex_kernel)
+    B, n = g1.adjacency.shape[0], g1.adjacency.shape[1]
+    m = g2.adjacency.shape[1]
+    diag = sys_.dx / sys_.vx
+    matvec = _make_sparse_matvec(sys_, packs1, packs2, edge_kernel,
+                                 sparse_mode, (B, n, m),
+                                 gram_tile=gram_tile)
+
+    def select(lanes):
+        import numpy as np
+        idx = jnp.asarray(np.asarray(lanes))
+        sub_sys = ProductSystem(*(jnp.take(f, idx, axis=0)
+                                  for f in sys_))
+        if gram_tile is not None:
+            # expand the per-axis packs to per-pair packs for the
+            # irregular survivor set (pair b = bi*Bj + bj, row-major)
+            Bi, Bj = gram_tile
+            p1 = take_row_panel_pack(packs1, idx // Bj)
+            p2 = take_row_panel_pack(packs2, idx % Bj)
+        else:
+            p1 = take_row_panel_pack(packs1, idx)
+            p2 = take_row_panel_pack(packs2, idx)
+        return _make_sparse_matvec(sub_sys, p1, p2, edge_kernel,
+                                   sparse_mode, (len(lanes), n, m))
+
+    rhs = sys_.dx * sys_.qx
+    sol = pcg_solve_segmented(matvec, rhs, diag, tol=tol,
+                              max_iter=max_iter,
+                              segment_size=segment_size,
+                              variant=pcg_variant, select=select,
+                              pad_multiple=pad_multiple)
+    values = jnp.sum(sys_.px * sol.x, axis=-1)
+    nodal = sol.x.reshape(B, n, m) if return_nodal else None
+    return MGKResult(values=values, iterations=sol.iterations,
+                     converged=sol.converged, nodal=nodal,
+                     matvec_pairs=sol.matvec_pairs)

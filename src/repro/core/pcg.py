@@ -27,6 +27,16 @@ Two recurrences (``variant=``, DESIGN.md §3):
   Ghysels–Vanroose variant, u = M^{-1} r and w = A u stay freshly
   computed, so f32 attainable accuracy matches classic PCG.
 
+Both variants are written as (init, body) *machines* over a per-pair
+state dict whose every leaf carries the leading batch axis. The lockstep
+solver (:func:`pcg_solve`) runs a machine under ``while_loop``/``scan``;
+:func:`pcg_solve_segmented` runs the SAME body in fixed-size segments
+and, between segments, compacts the live-pair set so converged pairs
+drop out of the matvec batch entirely (gather/scatter remap) instead of
+riding along masked to ``max_iter`` (DESIGN.md §8). Because every
+recurrence and reduction is per-pair, the compacted trajectory is
+iterate-for-iterate identical to masked lockstep.
+
 Differentiability: the dynamic ``while_loop`` body is NOT reverse-mode
 differentiable, and unrolling the iteration for autodiff would store
 every iterate. Gradients of solutions therefore go through the implicit
@@ -38,12 +48,16 @@ with the *identical* matvec closure (:func:`adjoint_solve`). The
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, NamedTuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["PCGResult", "pcg_solve", "adjoint_solve"]
+__all__ = ["PCGResult", "pcg_solve", "pcg_solve_segmented",
+           "adjoint_solve"]
 
 
 class PCGResult(NamedTuple):
@@ -51,20 +65,157 @@ class PCGResult(NamedTuple):
     iterations: jnp.ndarray  # [B] int32 iterations to convergence
     residual: jnp.ndarray    # [B] final ||r||^2
     converged: jnp.ndarray   # [B] bool
-
-
-def _run(cond, body, init, fixed_iters):
-    if fixed_iters is not None:
-        def scan_body(s, _):
-            return body(s), None
-        final, _ = jax.lax.scan(scan_body, init, None, length=fixed_iters)
-        return final
-    return jax.lax.while_loop(cond, body, init)
+    # scalar int32: total pair-matvec evaluations the solve performed
+    # (lockstep: B per iteration run; segmented: live pairs only). The
+    # Gram driver feeds this — with the per-pair ``iterations`` — back
+    # into bucket/cost planning (distributed/scheduler.py).
+    matvec_pairs: jnp.ndarray | None = None
 
 
 def _guard(x):
     """Divide-safe denominator (0 -> 1; the numerator is 0 there too)."""
     return jnp.where(x == 0, jnp.asarray(1.0, x.dtype), x)
+
+
+def _thresh(b, tol):
+    eps = jnp.asarray(1e-30, b.dtype)
+    b_norm2 = jnp.maximum(jnp.sum(b * b, axis=-1), eps)   # [B]
+    return (tol * tol) * b_norm2
+
+
+# -- the two recurrence machines ---------------------------------------------
+#
+# state: dict of per-pair arrays (EVERY leaf has the leading [B] axis, so
+# a gather/scatter remap of the batch is a tree_map) holding the iterates
+# plus the per-pair constants (diag preconditioner, convergence
+# threshold). body(matvec, state) advances one masked iteration;
+# converged pairs are frozen, so running extra masked iterations — or
+# running a pair in a different batch composition — never changes its
+# trajectory (the segmented-solver contract).
+
+def _classic_init(matvec, b, diag_precond, tol):
+    del matvec  # classic needs no setup matvec
+    thresh = _thresh(b, tol)
+    r0 = b
+    z0 = r0 / diag_precond
+    res0 = jnp.sum(r0 * r0, axis=-1)
+    return dict(
+        x=jnp.zeros_like(b), r=r0, p=z0,
+        rho=jnp.sum(r0 * z0, axis=-1),
+        conv=res0 <= thresh, res=res0,
+        iters=jnp.zeros(b.shape[0], jnp.int32),
+        diag=diag_precond, thresh=thresh)
+
+
+def _classic_body(matvec, st):
+    x, r, p, rho = st["x"], st["r"], st["p"], st["rho"]
+    conv, res, thresh = st["conv"], st["res"], st["thresh"]
+    active = ~conv
+    a = matvec(p)                                       # [B, N]
+    pa = jnp.sum(p * a, axis=-1)
+    alpha = jnp.where(active, rho / _guard(pa), 0.0)
+    x = x + alpha[:, None] * p
+    r = r - alpha[:, None] * a
+    z = r / st["diag"]
+    rho_new = jnp.sum(r * z, axis=-1)
+    beta = jnp.where(active, rho_new / _guard(rho), 0.0)
+    p = jnp.where(active[:, None], z + beta[:, None] * p, p)
+    res_new = jnp.where(active, jnp.sum(r * r, axis=-1), res)
+    conv = jnp.logical_or(conv, res_new <= thresh)
+    return dict(
+        x=x, r=r, p=p, rho=jnp.where(active, rho_new, rho),
+        conv=conv, res=res_new,
+        iters=st["iters"] + active.astype(jnp.int32),
+        diag=st["diag"], thresh=thresh)
+
+
+def _pipelined_init(matvec, b, diag_precond, tol):
+    """Chronopoulos–Gear setup: ONE matvec (w0 = A u0)."""
+    thresh = _thresh(b, tol)
+    r0 = b
+    u0 = r0 / diag_precond
+    w0 = matvec(u0)
+    gamma0 = jnp.sum(r0 * u0, axis=-1)
+    delta0 = jnp.sum(w0 * u0, axis=-1)
+    res0 = jnp.sum(r0 * r0, axis=-1)
+    conv0 = res0 <= thresh
+    zeros = jnp.zeros_like(b)
+    return dict(
+        x=jnp.zeros_like(b), r=r0, u=u0, w=w0, p=zeros, s=zeros,
+        gamma=gamma0,
+        alpha=jnp.where(conv0, 0.0, gamma0 / _guard(delta0)),
+        beta=jnp.zeros_like(gamma0),
+        conv=conv0, res=res0,
+        iters=jnp.zeros(b.shape[0], jnp.int32),
+        diag=diag_precond, thresh=thresh)
+
+
+def _pipelined_body(matvec, st):
+    """Single-reduction (Chronopoulos–Gear) pipelined PCG iteration.
+
+    Per iteration — ONE matvec, ONE fused reduction round:
+
+        p <- u + beta p;   s <- w + beta s        # s = A p by recurrence
+        x <- x + alpha p;  r <- r - alpha s
+        u = M^{-1} r;      w = A u                # the iteration's matvec
+        gamma' = (r, u);  delta = (w, u);  res = (r, r)   # fused round
+        beta'  = gamma' / gamma
+        alpha' = gamma' / (delta - beta' * gamma' / alpha)
+
+    alpha is derived from the SAME reduction round as gamma (the classic
+    recurrence would need (p, A p), a second, dependent round). The
+    convergence check reads the post-update residual exactly like the
+    classic body, so iteration counts match classic to the floating-point
+    drift of the s-recurrence (±1 in practice).
+    """
+    x, r, u, w = st["x"], st["r"], st["u"], st["w"]
+    p, s = st["p"], st["s"]
+    gamma, alpha, beta = st["gamma"], st["alpha"], st["beta"]
+    conv, res, thresh = st["conv"], st["res"], st["thresh"]
+    active = ~conv
+    am = active[:, None]
+    # -- vector updates from the PREVIOUS round's scalars -----------
+    p = jnp.where(am, u + beta[:, None] * p, p)
+    s = jnp.where(am, w + beta[:, None] * s, s)   # s = A p, recurred
+    x = x + alpha[:, None] * p
+    r = r - alpha[:, None] * s
+    u = jnp.where(am, r / st["diag"], u)
+    w = jnp.where(am, matvec(u), w)               # single matvec
+    # -- the single fused reduction round ---------------------------
+    gamma_new = jnp.sum(r * u, axis=-1)
+    delta = jnp.sum(w * u, axis=-1)
+    res_new = jnp.where(active, jnp.sum(r * r, axis=-1), res)
+    conv = jnp.logical_or(conv, res_new <= thresh)
+    still = ~conv
+    beta = jnp.where(still, gamma_new / _guard(gamma), 0.0)
+    alpha = jnp.where(
+        still,
+        gamma_new / _guard(delta - beta * gamma_new / _guard(alpha)),
+        0.0)
+    return dict(
+        x=x, r=r, u=u, w=w, p=p, s=s,
+        gamma=jnp.where(still, gamma_new, gamma), alpha=alpha, beta=beta,
+        conv=conv, res=res_new,
+        iters=st["iters"] + active.astype(jnp.int32),
+        diag=st["diag"], thresh=thresh)
+
+
+_MACHINES = {"classic": (_classic_init, _classic_body),
+             "pipelined": (_pipelined_init, _pipelined_body)}
+_SETUP_MATVECS = {"classic": 0, "pipelined": 1}
+
+
+def _machine(variant: str):
+    try:
+        return _MACHINES[variant]
+    except KeyError:
+        raise ValueError(f"unknown PCG variant {variant!r}") from None
+
+
+def _result(st, matvec_pairs=None) -> PCGResult:
+    return PCGResult(x=st["x"], iterations=st["iters"],
+                     residual=st["res"], converged=st["conv"],
+                     matvec_pairs=matvec_pairs)
 
 
 def pcg_solve(
@@ -77,7 +228,7 @@ def pcg_solve(
     fixed_iters: int | None = None,
     variant: str = "classic",
 ) -> PCGResult:
-    """Solve ``A x = b`` for a batch of SPD systems.
+    """Solve ``A x = b`` for a batch of SPD systems (masked lockstep).
 
     Args:
       matvec: function mapping [B, N] -> [B, N], applying each system's
@@ -99,14 +250,139 @@ def pcg_solve(
         "pipelined" (Ghysels–Vanroose: one fused reduction round that
         overlaps the matvec — see module docstring). Identical iterates in
         exact arithmetic.
+
+    The result's ``matvec_pairs`` records B x (iterations run + setup
+    matvecs) — the lockstep cost that :func:`pcg_solve_segmented` beats
+    by retiring converged pairs at segment boundaries.
     """
-    if variant == "classic":
-        return _pcg_classic(matvec, b, diag_precond, tol=tol,
-                            max_iter=max_iter, fixed_iters=fixed_iters)
-    if variant == "pipelined":
-        return _pcg_pipelined(matvec, b, diag_precond, tol=tol,
-                              max_iter=max_iter, fixed_iters=fixed_iters)
-    raise ValueError(f"unknown PCG variant {variant!r}")
+    init, body = _machine(variant)
+    st0 = init(matvec, b, diag_precond, tol)
+    step = functools.partial(body, matvec)
+    if fixed_iters is not None:
+        def scan_body(s, _):
+            return step(s), None
+        st, _ = jax.lax.scan(scan_body, st0, None, length=fixed_iters)
+        it = jnp.int32(fixed_iters)
+    else:
+        def cond(carry):
+            s, it = carry
+            return jnp.logical_and(it < max_iter, ~jnp.all(s["conv"]))
+
+        def wbody(carry):
+            s, it = carry
+            return step(s), it + 1
+
+        st, it = jax.lax.while_loop(cond, wbody, (st0, jnp.int32(0)))
+    B = b.shape[0]
+    pairs = B * (it + _SETUP_MATVECS[variant])
+    return _result(st, matvec_pairs=pairs)
+
+
+def pcg_solve_segmented(
+    matvec: Callable[[jnp.ndarray], jnp.ndarray],
+    b: jnp.ndarray,
+    diag_precond: jnp.ndarray,
+    *,
+    tol: float = 1e-10,
+    max_iter: int = 256,
+    segment_size: int = 32,
+    variant: str = "classic",
+    select: Callable[[np.ndarray],
+                     Callable[[jnp.ndarray], jnp.ndarray]] | None = None,
+    pad_multiple: int = 1,
+) -> PCGResult:
+    """Convergence-segmented PCG with pair retirement (DESIGN.md §8).
+
+    Runs the lockstep body in segments of at most ``segment_size``
+    masked iterations (each one compiled bounded loop, early-exiting
+    when every live pair has converged). Between segments
+    the live-pair index set is compacted on the host: pairs that
+    converged during the segment RETIRE — their state is scattered back
+    into the full-batch result and they drop out of the matvec batch
+    entirely via a gather remap — instead of riding along masked to
+    ``max_iter``. Because every recurrence and reduction of the body is
+    per-pair, the compacted trajectory is iterate-for-iterate identical
+    to masked lockstep; only the amount of matvec work changes
+    (``matvec_pairs`` in the result counts it).
+
+    Args (beyond :func:`pcg_solve`):
+      segment_size: iterations per segment. Within a segment a converged
+        pair still rides along masked (frozen); retirement happens at
+        segment boundaries.
+      select: ``select(indices) -> matvec`` building the operator for a
+        compacted sub-batch, where ``indices`` is a host int array of
+        live pair indices into the original batch (the Gram-tile /
+        row-panel packs gather along their pair axis,
+        ``core/mgk.py:mgk_pairs_sparse_segmented``). Without it no
+        compaction happens — segments only add early-exit checks — and
+        ``matvec_pairs`` counts the full batch per iteration.
+      pad_multiple: round the live-pair count up to this multiple by
+        repeating the first live index (bounds jit-shape diversity; the
+        duplicate lanes iterate identically and only the real lanes are
+        scattered back). 1 = exact compaction.
+
+    This is a HOST-DRIVEN loop (it cannot run under an enclosing jit);
+    each segment itself runs as one compiled bounded loop.
+    """
+    init, body = _machine(variant)
+    if segment_size < 1:
+        raise ValueError(f"segment_size must be >= 1, got {segment_size}")
+    B = b.shape[0]
+    full = init(matvec, b, diag_precond, tol)
+    evals = B * _SETUP_MATVECS[variant]
+    live = np.arange(B)           # real live indices (no pad lanes)
+    lanes = live                  # live + pad lanes, the gathered batch
+    st = full                     # state of the current `lanes` batch
+    mv = matvec
+
+    def run_segment(step_body, state, k):
+        # bounded loop: at most k masked iterations, early exit the
+        # moment every LIVE lane converges (mid-segment iterations on a
+        # fully-converged live set would be pure waste)
+        def cond(carry):
+            s, it = carry
+            return jnp.logical_and(it < k, ~jnp.all(s["conv"]))
+
+        def wbody(carry):
+            s, it = carry
+            return step_body(s), it + 1
+
+        out, it = jax.lax.while_loop(cond, wbody, (state, jnp.int32(0)))
+        return out, int(it)
+
+    done = 0
+    while done < max_iter and live.size:
+        if bool(np.asarray(st["conv"]).all()):
+            break
+        k = min(segment_size, max_iter - done)
+        st, ran = run_segment(functools.partial(body, mv), st, k)
+        evals += int(lanes.size) * ran
+        done += ran
+        if ran == 0:
+            break
+        # retire: scatter the REAL lanes back, re-gather the survivors
+        n_real = live.size
+        if lanes.size != B or not np.array_equal(lanes, np.arange(B)):
+            idx = jnp.asarray(live)
+            full = {f: v.at[idx].set(st[f][:n_real])
+                    for f, v in full.items()}
+        else:
+            full = st
+        conv_live = np.asarray(st["conv"])[:n_real]
+        new_live = live[~conv_live]
+        if new_live.size == 0:
+            break
+        if select is None or new_live.size == live.size:
+            continue      # nothing retired (or no compaction possible)
+        live = new_live
+        lanes = live
+        if pad_multiple > 1 and lanes.size % pad_multiple:
+            n_pad = -lanes.size % pad_multiple
+            lanes = np.concatenate([lanes, np.repeat(lanes[:1], n_pad)])
+        gidx = jnp.asarray(lanes)
+        st = {f: jnp.take(v, gidx, axis=0) for f, v in full.items()}
+        mv = select(lanes)
+    return _result(full, matvec_pairs=jnp.int32(evals))
 
 
 def adjoint_solve(
@@ -128,120 +404,3 @@ def adjoint_solve(
     variant).
     """
     return pcg_solve(matvec, cotangent, diag_precond, **kw)
-
-
-def _pcg_classic(matvec, b, diag_precond, *, tol, max_iter, fixed_iters):
-    eps = jnp.asarray(1e-30, b.dtype)
-    b_norm2 = jnp.maximum(jnp.sum(b * b, axis=-1), eps)   # [B]
-    thresh = (tol * tol) * b_norm2
-
-    x0 = jnp.zeros_like(b)
-    r0 = b
-    z0 = r0 / diag_precond
-    p0 = z0
-    rho0 = jnp.sum(r0 * z0, axis=-1)
-    res0 = jnp.sum(r0 * r0, axis=-1)
-    conv0 = res0 <= thresh
-    iters0 = jnp.zeros(b.shape[0], jnp.int32)
-
-    State = tuple  # (x, r, p, rho, conv, res, it, iters)
-
-    def cond(s: State):
-        _, _, _, _, conv, _, it, _ = s
-        return jnp.logical_and(it < max_iter, ~jnp.all(conv))
-
-    def body(s: State):
-        x, r, p, rho, conv, res, it, iters = s
-        active = ~conv
-        a = matvec(p)                                       # [B, N]
-        pa = jnp.sum(p * a, axis=-1)
-        alpha = jnp.where(active, rho / _guard(pa), 0.0)
-        x = x + alpha[:, None] * p
-        r = r - alpha[:, None] * a
-        z = r / diag_precond
-        rho_new = jnp.sum(r * z, axis=-1)
-        beta = jnp.where(active, rho_new / _guard(rho), 0.0)
-        p = jnp.where(active[:, None], z + beta[:, None] * p, p)
-        res_new = jnp.where(active, jnp.sum(r * r, axis=-1), res)
-        conv = jnp.logical_or(conv, res_new <= thresh)
-        iters = iters + active.astype(jnp.int32)
-        rho = jnp.where(active, rho_new, rho)
-        return (x, r, p, rho, conv, res_new, it + 1, iters)
-
-    init = (x0, r0, p0, rho0, conv0, res0, jnp.int32(0), iters0)
-    x, _, _, _, conv, res, _, iters = _run(cond, body, init, fixed_iters)
-    return PCGResult(x=x, iterations=iters, residual=res, converged=conv)
-
-
-def _pcg_pipelined(matvec, b, diag_precond, *, tol, max_iter, fixed_iters):
-    """Single-reduction (Chronopoulos–Gear) pipelined PCG.
-
-    Per iteration — ONE matvec, ONE fused reduction round:
-
-        p <- u + beta p;   s <- w + beta s        # s = A p by recurrence
-        x <- x + alpha p;  r <- r - alpha s
-        u = M^{-1} r;      w = A u                # the iteration's matvec
-        gamma' = (r, u);  delta = (w, u);  res = (r, r)   # fused round
-        beta'  = gamma' / gamma
-        alpha' = gamma' / (delta - beta' * gamma' / alpha)
-
-    alpha is derived from the SAME reduction round as gamma (the classic
-    recurrence would need (p, A p), a second, dependent round). The
-    convergence check reads the post-update residual exactly like the
-    classic body, so iteration counts match classic to the floating-point
-    drift of the s-recurrence (±1 in practice).
-    """
-    eps = jnp.asarray(1e-30, b.dtype)
-    b_norm2 = jnp.maximum(jnp.sum(b * b, axis=-1), eps)   # [B]
-    thresh = (tol * tol) * b_norm2
-
-    x0 = jnp.zeros_like(b)
-    r0 = b
-    u0 = r0 / diag_precond
-    w0 = matvec(u0)
-    gamma0 = jnp.sum(r0 * u0, axis=-1)
-    delta0 = jnp.sum(w0 * u0, axis=-1)
-    res0 = jnp.sum(r0 * r0, axis=-1)
-    conv0 = res0 <= thresh
-    alpha0 = jnp.where(conv0, 0.0, gamma0 / _guard(delta0))
-    beta0 = jnp.zeros_like(gamma0)
-    zeros = jnp.zeros_like(b)
-    iters0 = jnp.zeros(b.shape[0], jnp.int32)
-
-    # (x, r, u, w, p, s, gamma, alpha, beta, conv, res, it, iters)
-    def cond(st):
-        conv, it = st[9], st[11]
-        return jnp.logical_and(it < max_iter, ~jnp.all(conv))
-
-    def body(st):
-        x, r, u, w, p, s, gamma, alpha, beta, conv, res, it, iters = st
-        active = ~conv
-        am = active[:, None]
-        # -- vector updates from the PREVIOUS round's scalars -----------
-        p = jnp.where(am, u + beta[:, None] * p, p)
-        s = jnp.where(am, w + beta[:, None] * s, s)   # s = A p, recurred
-        x = x + alpha[:, None] * p
-        r = r - alpha[:, None] * s
-        u = jnp.where(am, r / diag_precond, u)
-        w = jnp.where(am, matvec(u), w)               # single matvec
-        # -- the single fused reduction round ---------------------------
-        gamma_new = jnp.sum(r * u, axis=-1)
-        delta = jnp.sum(w * u, axis=-1)
-        res_new = jnp.where(active, jnp.sum(r * r, axis=-1), res)
-        conv = jnp.logical_or(conv, res_new <= thresh)
-        iters = iters + active.astype(jnp.int32)
-        still = ~conv
-        beta = jnp.where(still, gamma_new / _guard(gamma), 0.0)
-        alpha = jnp.where(
-            still,
-            gamma_new / _guard(delta - beta * gamma_new / _guard(alpha)),
-            0.0)
-        gamma = jnp.where(still, gamma_new, gamma)
-        return (x, r, u, w, p, s, gamma, alpha, beta, conv, res_new,
-                it + 1, iters)
-
-    init = (x0, r0, u0, w0, zeros, zeros, gamma0, alpha0, beta0, conv0,
-            res0, jnp.int32(0), iters0)
-    final = _run(cond, body, init, fixed_iters)
-    x, conv, res, iters = final[0], final[9], final[10], final[12]
-    return PCGResult(x=x, iterations=iters, residual=res, converged=conv)

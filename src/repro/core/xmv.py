@@ -34,7 +34,7 @@ import jax.numpy as jnp
 
 from .base_kernels import BaseKernel
 
-__all__ = ["xmv_full", "xmv_elementwise", "xmv_lowrank",
+__all__ = ["xmv_full", "xmv_gram_full", "xmv_elementwise", "xmv_lowrank",
            "weighted_operands", "weighted_operand_grads"]
 
 
@@ -53,6 +53,20 @@ def xmv_full(A, E, Ap, Ep, P, edge_kernel: BaseKernel, theta=None):
                theta)
     W = A[:, :, None, None] * Ap[None, None, :, :] * K
     return jnp.einsum("ijkl,jl->ik", W, P)
+
+
+def xmv_gram_full(A1, E1, A2, E2, P, edge_kernel: BaseKernel, theta=None):
+    """Cross-pair oracle for Gram-tile execution: every (i, j) pair of
+    a row axis ``A1/E1`` [Bi, n, n] against a column axis ``A2/E2``
+    [Bj, m, m], applied to ``P`` [Bi, Bj, n, m] -> [Bi, Bj, n, m].
+
+    A doubly-vmapped :func:`xmv_full` — O(Bi*Bj*n^2*m^2) memory, the
+    validation/bench reference for ``kernels.xmv_gram_tile`` only."""
+    one = lambda a, e, ap, ep, p: xmv_full(a, e, ap, ep, p,     # noqa
+                                           edge_kernel, theta=theta)
+    inner = jax.vmap(one, in_axes=(None, None, 0, 0, 0))    # over Bj
+    return jax.vmap(inner, in_axes=(0, 0, None, None, 0))(A1, E1, A2,
+                                                          E2, P)
 
 
 def xmv_elementwise(A, E, Ap, Ep, P, edge_kernel: BaseKernel,

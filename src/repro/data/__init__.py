@@ -4,10 +4,12 @@ padding / bucketing loader that feeds the solver fixed shapes."""
 from .synthetic import barabasi_albert, newman_watts_strogatz, \
     make_synthetic_dataset
 from .molecules import make_pdb_like_dataset, make_drugbank_like_dataset
-from .loader import BucketedDataset, bucket_graphs, pair_blocks
+from .loader import BucketedDataset, bucket_graphs, gram_tile_blocks, \
+    pair_blocks
 
 __all__ = [
     "barabasi_albert", "newman_watts_strogatz", "make_synthetic_dataset",
     "make_pdb_like_dataset", "make_drugbank_like_dataset",
     "BucketedDataset", "bucket_graphs", "pair_blocks",
+    "gram_tile_blocks",
 ]

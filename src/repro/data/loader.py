@@ -18,7 +18,8 @@ import numpy as np
 
 from repro.core.graph import Graph, GraphBatch, batch_from_graphs
 
-__all__ = ["BucketedDataset", "bucket_graphs", "pair_blocks", "PairBlock"]
+__all__ = ["BucketedDataset", "bucket_graphs", "pair_blocks",
+           "gram_tile_blocks", "PairBlock"]
 
 
 def _bucket_sizes(sizes: np.ndarray, multiple_of: int,
@@ -105,6 +106,49 @@ class PairBlock:
         """Cost model for load balancing: Σ (n_i * n_j)^2 — the XMV work of
         one CG iteration (paper Sec. V-B's 'variation of graph size')."""
         return float(self.n_pairs) * (self.pad_row * self.pad_col) ** 2
+
+
+def gram_tile_blocks(ds: BucketedDataset, tile_rows: int = 8,
+                     tile_cols: int = 8,
+                     upper_triangular: bool = True) -> Iterator[PairBlock]:
+    """All-pairs work as RECTANGULAR Gram tiles (DESIGN.md §8).
+
+    Unlike :func:`pair_blocks` — which chunks the raveled pair list, so
+    a block's rows/cols are an arbitrary span of the product — every
+    block here is the row-major flattening of ``unique_rows x
+    unique_cols`` with at most ``tile_rows`` x ``tile_cols`` unique
+    graphs per axis. That rectangle structure is what Gram-tile
+    execution exploits: ONE row-panel pack per axis (Bi + Bj packs, not
+    Bi*Bj), each row graph's panels reused across all its column
+    partners in one ``xmv_gram_tile`` launch.
+
+    On a diagonal bucket pair with ``upper_triangular``, tiles lying
+    entirely below the diagonal are skipped; tiles straddling it keep
+    their full rectangle (a few redundant mirror pairs — the classic
+    tile-vs-triangle trade; the symmetric Gram assembly of
+    ``distributed/checkpoint.py`` absorbs them).
+    """
+    bid = 0
+    nb = len(ds.buckets)
+    for bi in range(nb):
+        for bj in range(bi, nb) if upper_triangular else range(nb):
+            r_idx = ds.buckets[bi].indices
+            c_idx = ds.buckets[bj].indices
+            for r0 in range(0, len(r_idx), tile_rows):
+                for c0 in range(0, len(c_idx), tile_cols):
+                    if upper_triangular and bi == bj \
+                            and c0 + tile_cols <= r0:
+                        continue      # tile entirely below the diagonal
+                    rch = r_idx[r0:r0 + tile_rows]
+                    cch = c_idx[c0:c0 + tile_cols]
+                    rr, cc = np.meshgrid(rch, cch, indexing="ij")
+                    yield PairBlock(
+                        block_id=bid,
+                        bucket_row=bi, bucket_col=bj,
+                        rows=rr.ravel(), cols=cc.ravel(),
+                        pad_row=ds.buckets[bi].pad_to,
+                        pad_col=ds.buckets[bj].pad_to)
+                    bid += 1
 
 
 def pair_blocks(ds: BucketedDataset, pairs_per_block: int = 64,

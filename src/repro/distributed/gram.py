@@ -49,9 +49,18 @@ class GraphPackCache:
 
     ``edge_kernel`` (feature-expandable) additionally precomputes the MXU
     contraction operands into the cached packs. ``max_entries`` bounds
-    host memory with LRU eviction — the scheduler emits blocks
+    host memory with LRU eviction (configurable through
+    ``GramDriver.pack_cache_entries``) — the scheduler emits blocks
     bucket-contiguously, so even a bound far below the dataset size keeps
-    the reuse (a graph's blocks are temporally close).
+    the reuse (a graph's blocks are temporally close). An evicted graph
+    is simply re-decomposed on its next miss; the round trip is
+    bit-identical (the pack is a pure function of the graph arrays).
+
+    Pack-time STATISTICS (octile count, nnz, occupancy density) persist
+    in ``self.stats`` even after the pack itself is evicted — they are a
+    few floats per graph and feed the scheduler's cost model
+    (``GramDriver.plan`` -> ``scheduler.estimate_cost``), replacing its
+    uniform-density assumption with measured sparsity.
     """
 
     def __init__(self, tile: int = 8, edge_kernel=None,
@@ -62,6 +71,7 @@ class GraphPackCache:
         self.max_entries = max_entries
         self.with_grad = with_grad   # also bake values_grad companions
         self._packs: "collections.OrderedDict" = collections.OrderedDict()
+        self.stats: dict = {}        # (idx, pad) -> octile/nnz/density
         self.hits = 0
         self.misses = 0
 
@@ -78,6 +88,13 @@ class GraphPackCache:
         while len(self._packs) >= self.max_entries:
             self._packs.popitem(last=False)
         oset = octile_decompose(adjacency, labels, tile=self.tile)
+        nt = oset.n_tiles_side
+        self.stats[key] = {
+            "octiles": int(oset.n_nonempty),
+            "nnz": int(np.count_nonzero(oset.values_adj)),
+            "tile_rows": int(nt),
+            "density": float(oset.n_nonempty) / max(nt * nt, 1),
+        }
         # as_numpy: the cache re-pads and stacks host-side; the single
         # device transfer happens in stacked()
         p = pack_row_panels(oset, edge_kernel=self.edge_kernel,
@@ -85,6 +102,12 @@ class GraphPackCache:
         entry = {f: getattr(p, f) for f in type(p)._fields}
         self._packs[key] = entry
         return entry
+
+    def density(self, idx: int, pad_to: int) -> float | None:
+        """Measured octile occupancy of graph ``idx`` at bucket pad
+        ``pad_to`` — None until the graph has been packed once."""
+        s = self.stats.get((int(idx), int(pad_to)))
+        return None if s is None else s["density"]
 
     @staticmethod
     def _pad_k(arr: np.ndarray, k_max: int) -> np.ndarray:
@@ -127,6 +150,22 @@ class GraphPackCache:
 
         return RowPanelPack(**{f: stack(f) for f in RowPanelPack._fields})
 
+    def stacked_axis(self, indices, batch: GraphBatch):
+        """PER-AXIS pack for Gram-tile execution (DESIGN.md §8): one
+        stacked RowPanelPack over the given UNIQUE graphs — the Bi row
+        (or Bj column) axis of an I x J Gram tile. Compared to building
+        :meth:`stacked` per-pair packs for the tile's flattened pair
+        batch, this skips the Bj-fold (resp. Bi-fold) re-stacking and
+        device-transfer duplication entirely: each graph's panels are
+        padded and shipped once per tile, and the Gram-tile kernel
+        reuses them across every partner."""
+        if batch.adjacency.shape[0] != len(indices):
+            raise ValueError(
+                f"axis batch size {batch.adjacency.shape[0]} != "
+                f"{len(indices)} axis indices (per-axis packs take the"
+                f" UNIQUE graphs, not the flattened pair batch)")
+        return self.stacked(indices, batch)
+
 
 def pair_shardings(mesh: Mesh) -> tuple:
     """(in_shardings for (g1, g2), out_shardings for MGKResult).
@@ -167,6 +206,35 @@ def pair_shardings(mesh: Mesh) -> tuple:
     return (g1_shard, g2_shard), out_shard
 
 
+# per-grid-step VMEM envelope above which gram_pair_step routes a
+# Gram-tile block back to the per-pair row-panel kernel (the ~16 MB/core
+# budget minus headroom for Mosaic's own buffers)
+_GRAM_TILE_VMEM_BUDGET = 12 << 20
+
+
+def _axis_structure(rows, cols):
+    """(unique_rows, unique_cols) if (rows, cols) is the row-major
+    flattening of their rectangle (``gram_tile_blocks`` structure),
+    else None (ragged blocks fall back to per-pair execution)."""
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    B = len(rows)
+    if B == 0 or len(cols) != B:
+        return None
+    changes = np.nonzero(rows != rows[0])[0]
+    Bj = int(changes[0]) if changes.size else B
+    if B % Bj:
+        return None
+    Bi = B // Bj
+    urows, ucols = rows[::Bj], cols[:Bj]
+    if len(set(urows.tolist())) != Bi or len(set(ucols.tolist())) != Bj:
+        return None
+    if not (np.array_equal(np.repeat(urows, Bj), rows)
+            and np.array_equal(np.tile(ucols, Bi), cols)):
+        return None
+    return urows, ucols
+
+
 def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
                    edge_kernel: BaseKernel, *, method: str = "lowrank",
                    tol: float = 1e-8, max_iter: int = 256,
@@ -174,6 +242,10 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
                    pcg_variant: str = "classic",
                    sparse_mode: str = "auto",
                    tile: int = 8,
+                   gram_tile: bool = False,
+                   segment_size: int | None = None,
+                   segment_pad: int = 1,
+                   pack_cache_entries: int = 65536,
                    with_grad: bool = False) -> Callable:
     """Build the pair-solve step for a mesh.
 
@@ -203,12 +275,37 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
     contraction whenever ``edge_kernel`` has a feature expansion;
     ``tile`` sets the octile edge (buckets must pad to a multiple).
     The step accepts optional ``rows``/``cols`` dataset indices (the
-    driver passes them; without them the packs are built uncached)."""
+    driver passes them; without them the packs are built uncached).
+
+    ``gram_tile=True`` (sparse only): blocks whose (rows, cols) form a
+    rectangle (``data.gram_tile_blocks``) solve in GRAM-TILE execution
+    (DESIGN.md §8) — ONE row-panel pack per axis from
+    :meth:`GraphPackCache.stacked_axis` (no per-pair restacking) and one
+    ``xmv_gram_tile`` launch per matvec, reusing each row graph's
+    panels across all its column partners. Non-rectangular blocks fall
+    back to the per-pair path transparently.
+
+    ``segment_size`` (sparse, forward only): solve with
+    convergence-segmented PCG — converged pairs RETIRE between segments
+    instead of riding along masked (``mgk_pairs_sparse_segmented``;
+    ``segment_pad`` rounds live-batch sizes to bound jit-shape
+    diversity). Mutually exclusive with ``fixed_iters``."""
     solve_kw = dict(tol=tol, max_iter=max_iter, fixed_iters=fixed_iters,
                     pcg_variant=pcg_variant)
     if method == "pallas_sparse":
+        from repro.core.mgk import mgk_pairs_sparse_segmented
         from repro.kernels.ops import row_panel_packs_for_batch
 
+        if segment_size is not None and fixed_iters is not None:
+            raise ValueError(
+                "segment_size (convergence-segmented PCG) and"
+                " fixed_iters (uniform trip count) are mutually"
+                " exclusive")
+        if segment_size is not None and with_grad:
+            raise ValueError(
+                "segment_size is forward-only: the adjoint custom_vjp"
+                " (run_with_grad) solves with lockstep pcg_solve —"
+                " unset segment_size for gradient runs")
         expand = edge_kernel.feature_rank() is not None and \
             sparse_mode in ("auto", "mxu")
         if sparse_mode == "mxu" and not expand:
@@ -223,15 +320,43 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
         domain = getattr(edge_kernel, "domain", None) \
             if sparse_mode == "auto" else None
         cache = GraphPackCache(tile=tile, edge_kernel=ek_pack,
+                               max_entries=pack_cache_entries,
                                with_grad=with_grad)
 
-        def _block_packs(g1, g2, rows, cols):
-            block_mode = mode
+        def _resolve_block_mode(g1, g2):
             if mode == "mxu" and domain is not None:
                 lmax = max(float(np.abs(np.asarray(g1.edge_labels)).max()),
                            float(np.abs(np.asarray(g2.edge_labels)).max()))
                 if lmax > domain:
-                    block_mode = "elementwise"
+                    return "elementwise"
+            return mode
+
+        def _block_packs(g1, g2, rows, cols):
+            """(packs1, packs2, mode, gram_tile_shape) for one block:
+            per-AXIS packs + (Bi, Bj) when the block is a rectangle and
+            gram_tile execution is on, else per-pair packs + None."""
+            block_mode = _resolve_block_mode(g1, g2)
+            axes = _axis_structure(rows, cols) \
+                if gram_tile and rows is not None and cols is not None \
+                else None
+            if axes is not None:
+                from repro.kernels.xmv_block_sparse import \
+                    gram_tile_vmem_bytes
+                urows, ucols = axes
+                Bi, Bj = len(urows), len(ucols)
+                # the flattened pair batch is urows x ucols row-major:
+                # unique row graphs sit at strides of Bj, the unique
+                # column graphs are the first Bj entries
+                g1u = jax.tree.map(lambda x: x[::Bj], g1)
+                g2u = jax.tree.map(lambda x: x[:Bj], g2)
+                p1 = cache.stacked_axis(urows, g1u)
+                p2 = cache.stacked_axis(ucols, g2u)
+                # route buckets whose per-step envelope (graph j's whole
+                # pack + the P panel) would crowd VMEM back to the
+                # per-pair kernel, whose P BlockSpec streams instead
+                if gram_tile_vmem_bytes(p1, p2, block_mode == "mxu") \
+                        <= _GRAM_TILE_VMEM_BUDGET:
+                    return p1, p2, block_mode, (Bi, Bj)
             if rows is None or cols is None:
                 p1 = row_panel_packs_for_batch(g1, tile=tile,
                                                edge_kernel=ek_pack,
@@ -242,7 +367,7 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
             else:
                 p1 = cache.stacked(rows, g1)
                 p2 = cache.stacked(cols, g2)
-            return p1, p2, block_mode
+            return p1, p2, block_mode, None
 
         if with_grad:
             from repro.core.adjoint import flatten_grads, kernel_theta, \
@@ -250,11 +375,12 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
             theta = kernel_theta(vertex_kernel, edge_kernel)
 
             def grad_sparse_step(g1, g2, rows=None, cols=None):
-                p1, p2, block_mode = _block_packs(g1, g2, rows, cols)
+                p1, p2, block_mode, gt = _block_packs(g1, g2, rows, cols)
                 fn = mgk_value_fn(g1, g2, vertex_kernel, edge_kernel,
                                   method="sparse", packs1=p1, packs2=p2,
                                   sparse_mode=block_mode,
-                                  trust_pack_weights=True, **solve_kw)
+                                  trust_pack_weights=True, gram_tile=gt,
+                                  **solve_kw)
                 vals, grads, sol = fn.value_and_pair_grads(theta,
                                                            with_aux=True)
                 res = MGKResult(values=vals, iterations=sol.iterations,
@@ -263,20 +389,31 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
 
             grad_sparse_step.pack_cache = cache
             grad_sparse_step.wants_indices = True
+            grad_sparse_step.no_pair_pad = gram_tile
             grad_sparse_step.with_grad = True
             return grad_sparse_step
 
         def sparse_step(g1: GraphBatch, g2: GraphBatch,
                         rows=None, cols=None) -> MGKResult:
-            p1, p2, block_mode = _block_packs(g1, g2, rows, cols)
-            res = mgk_pairs_sparse(g1, g2, p1, p2, vertex_kernel,
-                                   edge_kernel, sparse_mode=block_mode,
-                                   **solve_kw)
+            p1, p2, block_mode, gt = _block_packs(g1, g2, rows, cols)
+            if segment_size is not None:
+                res = mgk_pairs_sparse_segmented(
+                    g1, g2, p1, p2, vertex_kernel, edge_kernel,
+                    sparse_mode=block_mode, tol=tol, max_iter=max_iter,
+                    segment_size=segment_size, pad_multiple=segment_pad,
+                    pcg_variant=pcg_variant, gram_tile=gt)
+            else:
+                res = mgk_pairs_sparse(g1, g2, p1, p2, vertex_kernel,
+                                       edge_kernel,
+                                       sparse_mode=block_mode,
+                                       gram_tile=gt, **solve_kw)
             return MGKResult(values=res.values, iterations=res.iterations,
-                             converged=res.converged, nodal=None)
+                             converged=res.converged, nodal=None,
+                             matvec_pairs=res.matvec_pairs)
 
         sparse_step.pack_cache = cache
         sparse_step.wants_indices = True
+        sparse_step.no_pair_pad = gram_tile
         return sparse_step
 
     if with_grad:
@@ -337,7 +474,10 @@ def solve_pair_block(ds: BucketedDataset, block: PairBlock, step: Callable,
     g1 = ds.batch(block.rows, pad_to=block.pad_row)
     g2 = ds.batch(block.cols, pad_to=block.pad_col)
     B = block.n_pairs
-    to = -(-B // pair_width) * pair_width
+    # Gram-tile steps keep the exact Bi x Bj rectangle (host-driven, no
+    # pair-axis sharding to pad for — dummy pairs would break it)
+    to = B if getattr(step, "no_pair_pad", False) \
+        else -(-B // pair_width) * pair_width
     if getattr(step, "wants_indices", False):
         # pack-caching sparse step: keyed by dataset index (dummy pairs
         # appended by _pad_batch key as -1 inside the cache)
@@ -368,6 +508,16 @@ class GramDriver:
     Usage:
         driver = GramDriver(ds, mesh, vertex_kernel, edge_kernel, store)
         gram = driver.run()            # resumable; returns [N, N] matrix
+
+    ``gram_tile=True`` (with ``method="pallas_sparse"``) switches block
+    generation to rectangular ``tile_shape`` Gram tiles and the solve to
+    Gram-tile execution (per-axis packs + ``xmv_gram_tile``, DESIGN.md
+    §8); ``segment_size`` additionally retires converged pairs between
+    PCG segments (forward ``run()`` only — ``run_with_grad`` raises,
+    its adjoint custom_vjp solves lockstep). ``plan()`` feeds MEASURED
+    sparsity (pack-cache octile
+    stats) and observed per-pair CG iteration counts (finished blocks in
+    the store) back into the scheduler's cost model.
     """
     ds: BucketedDataset
     mesh: Mesh
@@ -382,9 +532,24 @@ class GramDriver:
     sparse_mode: str = "auto"     # pallas_sparse: "auto" | "mxu" | ...
     tile: int = 8                 # octile edge for the sparse path
     pairs_per_block: int = 64
+    gram_tile: bool = False       # Gram-tile execution (sparse only)
+    tile_shape: tuple[int, int] = (8, 8)   # unique graphs per tile axis
+    segment_size: int | None = None        # segmented PCG (sparse only)
+    segment_pad: int = 1
+    pack_cache_entries: int = 65536        # GraphPackCache LRU bound
     normalize: bool = True
 
+    def __post_init__(self):
+        self._pack_cache = None   # set by _run (the step's cache)
+        self._iter_stats: dict[int, float] = {}  # block id -> mean iters
+        if self.gram_tile and self.method != "pallas_sparse":
+            raise ValueError(
+                "gram_tile execution needs method='pallas_sparse'")
+
     def blocks(self) -> list[PairBlock]:
+        if self.gram_tile:
+            from repro.data.loader import gram_tile_blocks
+            return list(gram_tile_blocks(self.ds, *self.tile_shape))
         return list(pair_blocks(self.ds, self.pairs_per_block))
 
     def plan(self, blocks: list[PairBlock] | None = None) -> SchedulePlan:
@@ -392,7 +557,60 @@ class GramDriver:
         done = self.store.done_blocks() if self.store else set()
         n_groups = max(
             1, self.mesh.devices.size // self._pair_width())
-        return replan(blocks, done, n_groups)
+        return replan(blocks, done, n_groups,
+                      densities=self._block_densities(blocks),
+                      iters=self._block_iters(blocks, done))
+
+    def _block_densities(self, blocks) -> dict[int, float] | None:
+        """Measured per-block octile occupancy from the pack cache's
+        stats (scheduler satellite): the product system touches
+        d_row * d_col of the tile products, and estimate_cost squares
+        its density knob, so the block estimate is sqrt(d_r * d_c)."""
+        cache = self._pack_cache
+        if cache is None or not cache.stats:
+            return None
+        out = {}
+        for b in blocks:
+            dr = [cache.density(int(i), b.pad_row)
+                  for i in set(b.rows.tolist())]
+            dc = [cache.density(int(i), b.pad_col)
+                  for i in set(b.cols.tolist())]
+            dr = [d for d in dr if d is not None]
+            dc = [d for d in dc if d is not None]
+            if dr and dc:
+                out[b.block_id] = float(
+                    np.sqrt(np.mean(dr) * np.mean(dc)))
+        return out or None
+
+    def _block_iters(self, blocks, done) -> dict[int, float] | None:
+        """Predicted CG iterations per block from OBSERVED per-pair
+        iteration counts of finished blocks (PCGResult.iterations
+        persisted in the store), averaged per bucket pair — the paper's
+        'iteration count varies with sparsity pattern' feedback loop."""
+        if not self.store or not done:
+            return None
+        by_id = {b.block_id: b for b in blocks}
+        per_bucket: dict = {}
+        for bid in done:
+            blk = by_id.get(bid)
+            if blk is None:
+                continue
+            # memoized per block: a finished block's record is
+            # immutable, so each npz is read (and CRC-checked) at most
+            # once per driver even across repeated plan()/replan calls
+            mean_it = self._iter_stats.get(bid)
+            if mean_it is None:
+                mean_it = float(np.mean(
+                    self.store.load_block(bid)["iterations"]))
+                self._iter_stats[bid] = mean_it
+            per_bucket.setdefault(
+                (blk.bucket_row, blk.bucket_col), []).append(mean_it)
+        if not per_bucket:
+            return None
+        mean = {k: float(np.mean(v)) for k, v in per_bucket.items()}
+        return {b.block_id: mean[(b.bucket_row, b.bucket_col)]
+                for b in blocks
+                if (b.bucket_row, b.bucket_col) in mean} or None
 
     def _pair_width(self) -> int:
         sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
@@ -428,7 +646,13 @@ class GramDriver:
                               fixed_iters=self.fixed_iters,
                               pcg_variant=self.pcg_variant,
                               sparse_mode=self.sparse_mode,
-                              tile=self.tile, with_grad=with_grad)
+                              tile=self.tile,
+                              gram_tile=self.gram_tile,
+                              segment_size=self.segment_size,
+                              segment_pad=self.segment_pad,
+                              pack_cache_entries=self.pack_cache_entries,
+                              with_grad=with_grad)
+        self._pack_cache = getattr(step, "pack_cache", None)
         blocks = self.blocks()
         by_id = {b.block_id: b for b in blocks}
         done = self.store.done_blocks() if self.store else set()

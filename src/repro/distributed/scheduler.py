@@ -32,7 +32,12 @@ def estimate_cost(block: PairBlock, density: float = 1.0,
     """Predicted work of a block: Sum_pairs (n*m)^2 * density^2 * iters.
 
     density is the mean octile occupancy after reordering (1.0 = dense);
-    the XMV touches density^2 of the tile products.
+    the XMV touches density^2 of the tile products. Both knobs are fed
+    by measurements when available: the Gram driver's `GraphPackCache`
+    records each graph's real octile occupancy at pack time, and
+    finished blocks report their per-pair CG iteration counts
+    (``PCGResult.iterations``) — see ``GramDriver.plan``. The uniform
+    defaults only cover blocks no measurement exists for yet.
     """
     return block.cost() * (density ** 2) * iters
 
@@ -56,10 +61,17 @@ class SchedulePlan:
 
 def make_plan(blocks: list[PairBlock], n_groups: int,
               densities: dict[int, float] | None = None,
-              speculate_tail: float = 0.05) -> SchedulePlan:
-    """LPT greedy placement of blocks onto n_groups device groups."""
+              speculate_tail: float = 0.05,
+              iters: dict[int, float] | None = None) -> SchedulePlan:
+    """LPT greedy placement of blocks onto n_groups device groups.
+
+    ``densities``/``iters`` map block ids to measured per-block octile
+    occupancy and predicted CG iteration counts (blocks absent from the
+    dicts use the uniform :func:`estimate_cost` defaults)."""
     densities = densities or {}
-    costs = np.array([estimate_cost(b, densities.get(b.block_id, 1.0))
+    iters = iters or {}
+    costs = np.array([estimate_cost(b, densities.get(b.block_id, 1.0),
+                                    iters.get(b.block_id, 32.0))
                       for b in blocks])
     order = np.argsort(-costs)  # heaviest first
     loads = np.zeros(n_groups)
@@ -87,8 +99,9 @@ def make_plan(blocks: list[PairBlock], n_groups: int,
 
 
 def replan(blocks: list[PairBlock], done_ids: set[int], n_groups: int,
-           densities: dict[int, float] | None = None) -> SchedulePlan:
+           densities: dict[int, float] | None = None,
+           iters: dict[int, float] | None = None) -> SchedulePlan:
     """Elastic re-planning: schedule only the not-yet-done blocks for the
     *current* group count. Deterministic given (blocks, done, n_groups)."""
     remaining = [b for b in blocks if b.block_id not in done_ids]
-    return make_plan(remaining, n_groups, densities)
+    return make_plan(remaining, n_groups, densities, iters=iters)

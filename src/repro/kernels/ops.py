@@ -13,7 +13,8 @@ from .ref import attention_ref, xmv_batched_ref, xmv_ref
 from .xmv_block_sparse import RowPanelPack, TilePack, \
     device_weighted_pack, pack_graph, pack_graph_row_panels, \
     pack_octiles, pack_row_panels, xmv_block_sparse, \
-    xmv_block_sparse_batched, xmv_row_panel, xmv_row_panel_batched
+    xmv_block_sparse_batched, xmv_gram_tile, xmv_row_panel, \
+    xmv_row_panel_batched
 from .xmv_dense import pick_tiles, xmv_dense, xmv_dense_batched
 
 __all__ = [
@@ -21,8 +22,8 @@ __all__ = [
     "xmv_block_sparse_batched", "xmv_block_sparse_unrolled", "stack_packs",
     "pack_graph", "pack_octiles", "TilePack", "RowPanelPack",
     "pack_row_panels", "pack_graph_row_panels", "xmv_row_panel",
-    "xmv_row_panel_batched", "stack_row_panel_packs",
-    "device_weighted_pack",
+    "xmv_row_panel_batched", "xmv_gram_tile", "stack_row_panel_packs",
+    "device_weighted_pack", "take_row_panel_pack",
     "row_panel_packs_for_batch", "flash_attention",
     "attention_ref", "xmv_ref", "xmv_batched_ref", "pick_tiles",
 ]
@@ -43,6 +44,15 @@ def stack_packs(packs: list[TilePack]) -> TilePack:
     """Stack per-pair TilePacks (same bucket => same shapes) to [B, ...];
     optional fields (``values_grad``) must be present in all or none."""
     return TilePack(*(_stack_field(packs, f) for f in TilePack._fields))
+
+
+def take_row_panel_pack(pack: RowPanelPack, indices) -> RowPanelPack:
+    """Gather a stacked RowPanelPack along its leading pair/graph axis
+    (``indices`` int array) — the segmented-PCG pair-retirement remap
+    and the Gram-tile -> per-pair pack expansion (core/mgk.py)."""
+    idx = jnp.asarray(indices)
+    return RowPanelPack(*(None if f is None else jnp.take(f, idx, axis=0)
+                          for f in pack))
 
 
 def stack_row_panel_packs(packs: list[RowPanelPack]) -> RowPanelPack:

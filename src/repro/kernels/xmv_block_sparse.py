@@ -35,6 +35,15 @@ primitive choice, re-targeted to the TPU's two compute units):
   makes tile sizes t ∈ {8, 16, 32} worthwhile (t = 32 feeds the MXU
   with 32x32 operands; the VPU path scales as t^4).
 
+The paper's SECOND reuse level — "warps across a thread block can
+further share tiles via the shared memory" — maps to the **Gram-tile**
+kernel (:func:`xmv_gram_tile`, DESIGN.md §8): one row-panel pack per
+AXIS of an I x J Gram tile (Bi row-graph packs + Bj column-graph packs,
+not Bi*Bj pair packs), a (Bi, nt, Bj) grid whose inner pair axis reuses
+graph i's VMEM-staged tile row across all Bj partners, and an in-kernel
+output-tile-column loop that collapses the per-pair kernel's mt grid
+axis.
+
 Legacy launch granularities kept as benchmark baselines (DESIGN.md §3):
 
 * :func:`xmv_block_sparse` — one pair per ``pallas_call``, unrolled
@@ -70,7 +79,8 @@ from repro.core.octile import OctileSet, octile_decompose
 __all__ = ["TilePack", "pack_octiles", "xmv_block_sparse",
            "xmv_block_sparse_batched", "RowPanelPack", "pack_row_panels",
            "pack_graph_row_panels", "xmv_row_panel",
-           "xmv_row_panel_batched", "device_weighted_pack"]
+           "xmv_row_panel_batched", "xmv_gram_tile",
+           "gram_tile_vmem_bytes", "device_weighted_pack"]
 
 
 class TilePack(NamedTuple):
@@ -590,6 +600,221 @@ def xmv_row_panel_batched(packs1: RowPanelPack, packs2: RowPanelPack, P,
     """
     return _row_panel_call(packs1, packs2, P, edge_kernel, diag, interpret,
                            acc_dtype, mode, batched=True, theta=theta)
+
+
+def _gram_tile_kernel(col1, cnt1, col2, cnt2,   # scalar-prefetch refs
+                      *refs, edge_kernel, acc_dtype, fused, mxu, tile,
+                      mt, rank, with_theta):
+    """Gram-tile kernel body: one grid step owns the [t, m] output ROW
+    STRIP of pair (bi, bj) at tile row i.
+
+    Grid layout: (Bi, nt, Bj) — the COLUMN-graph pair axis is the grid's
+    inner axis, so graph bi's VMEM-staged tile row (index map (bi, i),
+    constant across the whole inner bj sweep) is fetched ONCE and reused
+    by all Bj partners: the TPU-pipelining analog of the paper's
+    "warps across a thread block share tiles via shared memory", lifted
+    from slot pairs within one pair to the PAIR AXIS of a Gram tile.
+    Graph bj arrives as its whole row-panel pack (all mt tile rows in
+    one block), and the mt loop runs IN-KERNEL — mt-fold fewer grid
+    steps than the per-pair row-panel kernel on the same work.
+
+    Slot reductions stay bounded by the SMEM-prefetched actual counts;
+    the fused epilogue emits the full operator strip diag*p - y from
+    the already-resident P panel.
+    """
+    t = tile
+    bi, i, bj = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    theta = None
+    if with_theta:
+        from repro.core.base_kernels import unpack_theta
+        t_ref, *refs = refs
+        theta = unpack_theta(edge_kernel, t_ref[0])
+    if mxu:
+        w1_ref, w2_ref, p_ref = refs[:3]
+        rest = refs[3:]
+    else:
+        a1_ref, e1_ref, a2_ref, e2_ref, p_ref = refs[:5]
+        rest = refs[5:]
+    diag_ref, o_ref = (rest if fused else (None, rest[0]))
+
+    na = cnt1[bi, i]
+    m = mt * t
+
+    def p_block(ca, cb):
+        return p_ref[0, 0, pl.ds(ca * t, t),
+                     pl.ds(cb * t, t)].astype(acc_dtype)
+
+    def row_block(ip, strip):
+        # output block (i, ip) of pair (bi, bj): the usual ka x kb slot
+        # reduction, with graph bj's tile row read out of its whole
+        # VMEM-resident pack at row ip
+        nb = cnt2[bj, ip]
+
+        def outer(kk, acc):
+            ca = col1[bi, i, kk]
+            if mxu:
+                w = w1_ref[0, 0, pl.ds(kk * rank, rank)]     # [R, t, t]
+            else:
+                a = a1_ref[0, 0, kk].astype(acc_dtype)
+                e = e1_ref[0, 0, kk]
+
+            def inner(kkp, acc):
+                pblk = p_block(ca, col2[bj, ip, kkp])
+                if mxu:
+                    wp = w2_ref[0, ip, pl.ds(kkp * rank, rank)]
+                    contrib = _mxu_contrib(w, wp, pblk, acc_dtype)
+                else:
+                    contrib = _contrib(
+                        a, e, a2_ref[0, ip, kkp].astype(acc_dtype),
+                        e2_ref[0, ip, kkp], pblk, edge_kernel, acc_dtype,
+                        theta=theta)
+                return acc + contrib
+
+            return jax.lax.fori_loop(0, nb, inner, acc)
+
+        blk = jax.lax.fori_loop(0, na, outer,
+                                jnp.zeros((t, t), acc_dtype))
+        return jax.lax.dynamic_update_slice(strip, blk, (0, ip * t))
+
+    strip = jax.lax.fori_loop(0, mt, row_block,
+                              jnp.zeros((t, m), acc_dtype))
+    if fused:
+        # operator strip diag*p - y from the VMEM-resident P panel
+        dstrip = diag_ref[0, 0].astype(acc_dtype)
+        pstrip = p_ref[0, 0, pl.ds(i * t, t), :].astype(acc_dtype)
+        strip = dstrip * pstrip - strip
+    o_ref[0, 0] = strip.astype(o_ref.dtype)
+
+
+def gram_tile_vmem_bytes(packs_i: RowPanelPack, packs_j: RowPanelPack,
+                         mxu: bool) -> int:
+    """Per-grid-step VMEM envelope of :func:`xmv_gram_tile` in bytes
+    (f32, x2 for the pipeline's double buffering): graph j's whole
+    pack + graph i's tile row + the P panel + the diag/out strips.
+    ``gram_pair_step`` uses this to route over-budget buckets to the
+    per-pair :func:`xmv_row_panel_batched` automatically."""
+    t = packs_i.tile
+    nt, mt = packs_i.n_tile_rows, packs_j.n_tile_rows
+    ka, kb = packs_i.k_max, packs_j.k_max
+    n, m = nt * t, mt * t
+    ci = packs_i.rank if (mxu and packs_i.rank) else 2
+    cj = packs_j.rank if (mxu and packs_j.rank) else 2
+    per_step = (ka * ci * t * t          # graph i's tile row
+                + mt * kb * cj * t * t   # graph j's whole pack
+                + n * m                  # the pair's P panel
+                + 2 * t * m)             # diag + out strips
+    return 8 * per_step                  # 4 bytes x double buffering
+
+
+@functools.partial(jax.jit, static_argnames=("edge_kernel", "interpret",
+                                             "acc_dtype", "mode"))
+def xmv_gram_tile(packs_i: RowPanelPack, packs_j: RowPanelPack, P,
+                  edge_kernel, *, diag=None, mode: str = "auto",
+                  interpret=None, acc_dtype=jnp.float32, theta=None):
+    """All Bi x Bj cross-pair XMVs of a Gram tile in ONE ``pallas_call``.
+
+    ``packs_i``/``packs_j`` are stacked RowPanelPacks with a leading
+    PER-AXIS batch — Bi packs for the row graphs and Bj for the column
+    graphs, NOT Bi*Bj per-pair packs, so each graph's panels live in HBM
+    exactly once per Gram tile. ``P`` is [Bi, Bj, n, m]; the result is
+    the [Bi, Bj, n, m] stack of y = (A_i (x) A'_j .* E_i (x)k E'_j) P_ij.
+
+    Grid (Bi, nt, Bj): graph i's tile row is fetched once per (bi, i)
+    and reused across ALL Bj partners (the pair-axis operand reuse the
+    paper gets from thread-block shared memory); graph j's whole
+    row-panel pack is staged per step and the output-tile-column loop
+    runs in-kernel, collapsing the per-pair kernel's mt grid axis.
+    VMEM envelope per step (:func:`gram_tile_vmem_bytes`): graph j's
+    pack (4*mt*kb*(2 or R)*t^2 bytes) + one P panel (4*n*m) + graph i's
+    tile row — graph-kernel buckets sit far below the ~16 MB/core
+    budget. This function does NOT guard the envelope itself; the Gram
+    driver's ``gram_pair_step`` checks it and routes over-budget
+    buckets to the per-pair :func:`xmv_row_panel_batched`.
+
+    ``mode``/``diag``/``theta`` as in :func:`xmv_row_panel_batched`
+    (``diag``: [Bi, Bj, n, m] fused CG epilogue; ``theta``: traced
+    hyperparameter vector on the elementwise path).
+    """
+    t = packs_i.tile
+    nt, mt = packs_i.n_tile_rows, packs_j.n_tile_rows
+    ka, kb = packs_i.k_max, packs_j.k_max
+    Bi, Bj = packs_i.col.shape[0], packs_j.col.shape[0]
+    if P.ndim != 4:
+        raise ValueError(f"P must be [Bi, Bj, n, m], got shape {P.shape}")
+    Pi, Pj, n, m = P.shape
+    if (Pi, Pj) != (Bi, Bj):
+        raise ValueError(f"P pair axes {(Pi, Pj)} != pack axes"
+                         f" {(Bi, Bj)}")
+    if n != nt * t or m != mt * t:
+        raise ValueError(f"P shape {P.shape} inconsistent with tile packs"
+                         f" ({nt}x{t}, {mt}x{t})")
+    if packs_j.tile != t:
+        raise ValueError(f"tile mismatch: {t} vs {packs_j.tile}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    fused = diag is not None
+    mxu = _resolve_mode(mode, packs_i, packs_j)
+    rank = packs_i.rank if mxu else 0
+    if mxu and packs_j.rank != rank:
+        raise ValueError(
+            f"feature rank mismatch: {rank} vs {packs_j.rank}")
+
+    def panel_i(shape):
+        # ONE tile row of graph bi; constant across the inner bj axis
+        return pl.BlockSpec((1, 1) + shape,
+                            lambda bi, i, bj, c1, n1, c2, n2:
+                            (bi, i) + (0,) * len(shape))
+
+    def pack_j(shape):
+        # the WHOLE row-panel pack of graph bj (all mt tile rows)
+        return pl.BlockSpec((1,) + shape,
+                            lambda bi, i, bj, c1, n1, c2, n2:
+                            (bj,) + (0,) * len(shape))
+
+    p_spec = pl.BlockSpec((1, 1, n, m),
+                          lambda bi, i, bj, c1, n1, c2, n2:
+                          (bi, bj, 0, 0))
+    out_spec = pl.BlockSpec((1, 1, t, m),
+                            lambda bi, i, bj, c1, n1, c2, n2:
+                            (bi, bj, i, 0))
+
+    with_theta = theta is not None and not mxu
+    if mxu:
+        # slot-major, rank-minor flattening, as in the row-panel kernel
+        w1 = packs_i.values_w.reshape((Bi, nt, ka * rank, t, t))
+        w2 = packs_j.values_w.reshape((Bj, mt, kb * rank, t, t))
+        in_specs = [panel_i((ka * rank, t, t)),
+                    pack_j((mt, kb * rank, t, t)), p_spec]
+        inputs = [w1, w2, P]
+    else:
+        in_specs = [panel_i((ka, t, t)), panel_i((ka, t, t)),
+                    pack_j((mt, kb, t, t)), pack_j((mt, kb, t, t)),
+                    p_spec]
+        inputs = [packs_i.values_adj, packs_i.values_lab,
+                  packs_j.values_adj, packs_j.values_lab, P]
+    if with_theta:
+        n_theta = theta.shape[-1]
+        in_specs.insert(0, pl.BlockSpec((1, n_theta), lambda *_: (0, 0)))
+        inputs.insert(0, theta.reshape(1, n_theta))
+    if fused:
+        in_specs.append(out_spec)
+        inputs.append(diag)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(Bi, nt, Bj),
+        in_specs=in_specs,
+        out_specs=out_spec,
+    )
+    return pl.pallas_call(
+        functools.partial(_gram_tile_kernel, edge_kernel=edge_kernel,
+                          acc_dtype=acc_dtype, fused=fused, mxu=mxu,
+                          tile=t, mt=mt, rank=rank,
+                          with_theta=with_theta),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Bi, Bj, n, m), P.dtype),
+        interpret=interpret,
+    )(packs_i.col, packs_i.count, packs_j.col, packs_j.count, *inputs)
 
 
 def _kernel(slot_a, col_a, slot_b, col_b,   # scalar-prefetch refs

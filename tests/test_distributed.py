@@ -172,6 +172,90 @@ def test_sparse_step_domain_guard_falls_back_to_elementwise():
     np.testing.assert_allclose(out["values"], ref["values"], rtol=1e-4)
 
 
+def test_pack_cache_lru_eviction_roundtrip():
+    """The LRU bound must evict oldest entries, and eviction + re-pack
+    must round-trip bit-identically (a pack is a pure function of the
+    graph arrays); pack-time stats persist across eviction."""
+    from repro.core.graph import batch_from_graphs
+    from repro.distributed.gram import GraphPackCache
+    gs = [g for g in make_drugbank_like_dataset(12, seed=3)
+          if 6 <= g.n_nodes <= 32][:4]
+    batch = batch_from_graphs(gs, pad_to=32)
+    one = lambda b: jax.tree.map(lambda x: x[b:b + 1], batch)  # noqa
+
+    cache = GraphPackCache(tile=8, edge_kernel=EK, max_entries=2)
+    first = cache.stacked(np.array([0]), one(0))
+    for b in (1, 2, 3):          # push graph 0 out of the LRU window
+        cache.stacked(np.array([b]), one(b))
+    assert len(cache._packs) == 2
+    assert (0, 32) not in cache._packs          # evicted...
+    assert cache.density(0, 32) is not None     # ...stats persist
+    misses = cache.misses
+    again = cache.stacked(np.array([0]), one(0))
+    assert cache.misses == misses + 1           # re-packed, not cached
+    for a, b in zip(first, again):
+        if a is None:
+            assert b is None
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_plan_uses_measured_density_and_iterations(tmp_path):
+    """The scheduler satellite: after blocks complete, plan() must feed
+    the pack cache's measured octile occupancy and the store's observed
+    iteration counts into estimate_cost (not the uniform defaults)."""
+    from repro.distributed.scheduler import estimate_cost
+    ds = _dataset(8)
+    store = ChunkStore(str(tmp_path))
+    drv = GramDriver(ds, _mesh(), VK, EK, store=store,
+                     method="pallas_sparse", gram_tile=True,
+                     tile_shape=(3, 3))
+    drv.run()
+    blocks = drv.blocks()
+    densities = drv._block_densities(blocks)
+    iters = drv._block_iters(blocks, store.done_blocks())
+    assert densities and iters
+    # graphs are sparse: measured occupancy must be below the uniform
+    # assumption, and iteration predictions must be real CG counts
+    assert all(0.0 < d <= 1.0 for d in densities.values())
+    assert any(d < 1.0 for d in densities.values())
+    assert all(it >= 1.0 for it in iters.values())
+    bid = blocks[0].block_id
+    refined = estimate_cost(blocks[0], densities[bid], iters[bid])
+    assert refined != estimate_cost(blocks[0])   # defaults overridden
+    # a fully-done plan is empty but the wiring must not error
+    plan = drv.plan()
+    assert plan.assignment == tuple([()] * plan.n_groups) or \
+        plan.makespan_ratio >= 1.0
+
+
+def test_gram_tile_driver_matches_per_pair_driver():
+    ds = _dataset(7)
+    ref = GramDriver(ds, _mesh(), VK, EK, method="pallas_sparse",
+                     pairs_per_block=6).run()
+    for kw in (dict(), dict(segment_size=8)):
+        gt = GramDriver(ds, _mesh(), VK, EK, method="pallas_sparse",
+                        gram_tile=True, tile_shape=(3, 3), **kw).run()
+        np.testing.assert_allclose(gt, ref, rtol=1e-4, atol=1e-6)
+
+
+def test_gram_tile_blocks_cover_all_pairs():
+    ds = _dataset(11)
+    from repro.data import gram_tile_blocks
+    from repro.distributed.gram import _axis_structure
+    blocks = list(gram_tile_blocks(ds, 3, 4))
+    seen = set()
+    for b in blocks:
+        axes = _axis_structure(b.rows, b.cols)
+        assert axes is not None      # every tile is a clean rectangle
+        urows, ucols = axes
+        assert len(b.rows) == len(urows) * len(ucols)
+        for r, c in zip(b.rows, b.cols):
+            seen.add((min(r, c), max(r, c)))
+    n = len(ds)
+    assert len(seen) == n * (n + 1) // 2
+
+
 def test_pack_cache_rejects_non_multiple_tile():
     from repro.distributed.gram import GraphPackCache
     from repro.core.graph import batch_from_graphs

@@ -25,18 +25,24 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     from . import xmv_bench
+    from . import pcg_bench
     if args.smoke:
         from . import primitives
         primitives.run(sizes=(32,))
         xmv_bench.run(sizes=(2, 8), pad_to=32, iters=3, tiles=(8, 16, 32),
                       tile_B=2)
         xmv_bench.run_gram(shapes=((2, 2), (4, 4)), iters=3)
+        # PR 5: jacobi vs kron + bf16 bytes. iters=5 timing reps (the
+        # iteration-count asserts are deterministic; the wall-clock
+        # asserts need a stable median on a contended CI runner)
+        pcg_bench.run(iters=5)
         return
     from . import primitives, reorder_bench, adaptive, incremental, \
         packages, roofline
     primitives.run()          # paper Fig. 5 / Table I
     xmv_bench.run()           # PR 1: batched-grid + fused + pipelined CG
     xmv_bench.run_gram()      # PR 4: Gram-tile kernel + segmented PCG
+    pcg_bench.run()           # PR 5: Kronecker preconditioner + bf16
     reorder_bench.run()       # paper Figs. 6-7
     adaptive.run()            # paper Fig. 8
     incremental.run()         # paper Fig. 9

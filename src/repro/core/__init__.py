@@ -25,6 +25,9 @@ from .octile import (OctileSet, count_nonempty_tiles, expand_octiles,
                      tile_occupancy_histogram)
 from .pcg import PCGResult, adjoint_solve, pcg_solve, \
     pcg_solve_segmented
+from .precond import (KronFactors, kron_apply, kron_apply_gram,
+                      kron_factor_arrays, kron_factors, kron_scalars,
+                      stack_kron_factors, take_kron_factors)
 from .reorder import best_order, morton_order, pbr_order, rcm_order
 
 __all__ = [
@@ -37,6 +40,9 @@ __all__ = [
     "adaptive_route", "OctileSet", "count_nonempty_tiles",
     "expand_octiles", "octile_decompose", "tile_occupancy_histogram",
     "feature_operands", "PCGResult", "pcg_solve", "pcg_solve_segmented", "adjoint_solve",
+    "KronFactors", "kron_factors", "kron_factor_arrays", "kron_scalars",
+    "kron_apply", "kron_apply_gram", "take_kron_factors",
+    "stack_kron_factors",
     "best_order", "morton_order", "pbr_order", "rcm_order",
     "kernel_theta", "mgk_value_fn", "mgk_pairs_value_and_grad",
     "mgk_pairs_sparse_value_and_grad", "mgk_adaptive_value_and_grad",

@@ -56,8 +56,8 @@ import jax.numpy as jnp
 
 from .base_kernels import BaseKernel, Constant, ParamDerivative
 from .graph import GraphBatch
-from .mgk import _make_matvec, _make_sparse_matvec, _outer_flat, \
-    adaptive_route, build_product_system, stop_prob_override
+from .mgk import _make_matvec, _make_precond_apply, _make_sparse_matvec, \
+    _outer_flat, adaptive_route, build_product_system, stop_prob_override
 from .pcg import adjoint_solve, pcg_solve
 from .xmv import xmv_lowrank_precomputed, weighted_operand_grads, \
     weighted_operands
@@ -112,6 +112,9 @@ def mgk_value_fn(
     pcg_variant: str = "classic",
     trust_pack_weights: bool = False,
     gram_tile: tuple[int, int] | None = None,
+    precond: str = "jacobi",
+    kron_rank: int = 2,
+    precond_factors: tuple | None = None,
 ) -> Callable:
     """Build ``value(theta) -> [B]`` for aligned pair batches, wrapped in
     the adjoint-solve ``jax.custom_vjp``.
@@ -132,6 +135,18 @@ def mgk_value_fn(
     kernel parameters (the Gram driver's fixed-θ evaluation; it is what
     makes the pack cache shared between forward and adjoint solves).
 
+    ``precond="kron"``: BOTH the forward and the adjoint solve run with
+    the Kronecker-factored approximate inverse (DESIGN.md §9). The
+    factors are built ONCE here from the concrete batches (or taken
+    from ``precond_factors``, the Gram driver's pack-time cache) and
+    the identical SPD ``M^{-1}`` closure serves both solves — the
+    preconditioner shapes only the solve trajectory, so gradients and
+    the exactly-two-solves jaxpr pin are untouched. The factors use the
+    batches' PACK-TIME degrees: a traced ``q`` override still reaches
+    the operator and the right-hand side exactly (correctness), it just
+    doesn't re-derive the preconditioner statistics (iteration count
+    only).
+
     The returned callable carries ``value_and_pair_grads(theta)``
     returning per-pair gradients (``[B]`` leaves) from the same single
     forward + adjoint solve pair.
@@ -146,8 +161,14 @@ def mgk_value_fn(
                 " (legacy TilePacks have no differentiable path)")
     B, n = g1.adjacency.shape[0], g1.adjacency.shape[1]
     m = g2.adjacency.shape[1]
+    pf1, pf2 = precond_factors if precond_factors is not None \
+        else (None, None)
+    papply = _make_precond_apply(precond, g1, g2, vertex_kernel,
+                                 edge_kernel, (B, n, m),
+                                 gram_tile=gram_tile, factors1=pf1,
+                                 factors2=pf2, kron_rank=kron_rank)
     solve_kw = dict(tol=tol, max_iter=max_iter, fixed_iters=fixed_iters,
-                    variant=pcg_variant)
+                    variant=pcg_variant, precond_apply=papply)
 
     def _parts(theta):
         tv = theta.get("vertex") or None
@@ -174,8 +195,8 @@ def mgk_value_fn(
     def _solve(theta):
         sys_, mv = _system(theta)
         rhs = sys_.dx * sys_.qx
-        precond = sys_.dx / sys_.vx
-        sol = pcg_solve(mv, rhs, precond, **solve_kw)
+        diag = sys_.dx / sys_.vx
+        sol = pcg_solve(mv, rhs, diag, **solve_kw)
         return sol, sys_, mv
 
     # -- the adjoint backward pass --------------------------------------
@@ -260,8 +281,8 @@ def mgk_value_fn(
         ``sys_``/``mv`` are the forward solve's product system and
         matvec closure, reused — not rebuilt — for the adjoint."""
         tv, te, q = _parts(theta)
-        precond = sys_.dx / sys_.vx
-        lam = adjoint_solve(mv, ct[:, None] * sys_.px, precond,
+        diag = sys_.dx / sys_.vx
+        lam = adjoint_solve(mv, ct[:, None] * sys_.px, diag,
                             **solve_kw).x
         grads: dict = {}
         if "vertex" in theta:
@@ -371,18 +392,22 @@ def mgk_adaptive_value_and_grad(
     max_iter: int = 512,
     fixed_iters: int | None = None,
     pcg_variant: str = "classic",
+    precond: str = "jacobi",
+    kron_rank: int = 2,
 ) -> tuple[jnp.ndarray, dict]:
     """Adaptive-dispatch companion of ``mgk_adaptive``: route through
     the :func:`~repro.core.mgk.adaptive_route` table, then compute
     (values, per-pair hyperparameter grads) with the adjoint solve on
-    whichever backend the table picked."""
+    whichever backend the table picked. ``precond`` rides along to the
+    winning backend's forward AND adjoint solves."""
     theta = kernel_theta(vertex_kernel, edge_kernel, q=q) \
         if theta is None else theta
     route, tile = adaptive_route(g1, g2, edge_kernel,
                                  density_threshold=density_threshold,
                                  tile=tile)
     kw = dict(tol=tol, max_iter=max_iter, fixed_iters=fixed_iters,
-              pcg_variant=pcg_variant)
+              pcg_variant=pcg_variant, precond=precond,
+              kron_rank=kron_rank)
     if route.startswith("sparse"):
         from repro.kernels.ops import row_panel_packs_for_batch
         ek_pack = edge_kernel if route == "sparse_mxu" else None

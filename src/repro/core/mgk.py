@@ -164,6 +164,65 @@ def _make_matvec(g1: GraphBatch, g2: GraphBatch, sys_: ProductSystem,
     return matvec
 
 
+def _resolve_kron_factors(g1: GraphBatch, g2: GraphBatch,
+                          gram_tile: tuple[int, int] | None,
+                          factors1=None, factors2=None):
+    """Cached-or-derived :class:`~repro.core.precond.KronFactors` for a
+    pair batch — the ONE place the gram-tile slicing convention is
+    encoded for the preconditioner: under ``gram_tile=(Bi, Bj)`` the
+    row-major pair-flattened batches carry the unique row graphs at
+    strides of Bj and the unique column graphs as the first Bj entries
+    (matching ``distributed.gram._axis_structure``)."""
+    from .precond import kron_factors
+    if gram_tile is not None:
+        Bj = gram_tile[1]
+        if factors1 is None:
+            factors1 = kron_factors(jax.tree.map(lambda x: x[::Bj], g1))
+        if factors2 is None:
+            factors2 = kron_factors(jax.tree.map(lambda x: x[:Bj], g2))
+        return factors1, factors2
+    return (factors1 if factors1 is not None else kron_factors(g1),
+            factors2 if factors2 is not None else kron_factors(g2))
+
+
+def _make_precond_apply(precond: str, g1: GraphBatch, g2: GraphBatch,
+                        vertex_kernel: BaseKernel,
+                        edge_kernel: BaseKernel,
+                        shape: tuple[int, int, int],
+                        gram_tile: tuple[int, int] | None = None,
+                        factors1=None, factors2=None,
+                        kron_rank: int = 2):
+    """The ``M^{-1}`` application for the PCG solve, shared by every
+    entry point and the adjoint path (DESIGN.md §9):
+
+    * ``precond="jacobi"`` -> None (``pcg_solve`` falls back to the
+      paper's ``r / diag``);
+    * ``precond="kron"`` -> the Kronecker-factored approximate-inverse
+      apply of ``core/precond.py``. ``factors1``/``factors2`` are
+      optional precomputed :class:`~repro.core.precond.KronFactors`
+      (the Gram driver's pack-time cache); without them the factors are
+      derived in-trace from the batches — O(B n²), amortized over the
+      whole solve. Under ``gram_tile=(Bi, Bj)`` the factors are
+      PER-AXIS (row graphs / column graphs), sliced from the row-major
+      pair-flattened batches exactly like the per-axis packs.
+    """
+    if precond == "jacobi":
+        return None
+    if precond != "kron":
+        raise ValueError(f"unknown precond {precond!r}")
+    from .precond import kron_apply, kron_apply_gram
+    B, n, m = shape
+    factors1, factors2 = _resolve_kron_factors(g1, g2, gram_tile,
+                                               factors1, factors2)
+    if gram_tile is not None:
+        Bi, Bj = gram_tile
+        return kron_apply_gram(factors1, factors2, vertex_kernel,
+                               edge_kernel, (Bi, Bj, n, m),
+                               rank=kron_rank)
+    return kron_apply(factors1, factors2, vertex_kernel, edge_kernel,
+                      (B, n, m), rank=kron_rank)
+
+
 def _make_sparse_matvec(sys_: ProductSystem, packs1, packs2,
                         edge_kernel: BaseKernel, sparse_mode: str,
                         shape: tuple[int, int, int],
@@ -250,7 +309,7 @@ def _make_sparse_matvec(sys_: ProductSystem, packs1, packs2,
     jax.jit,
     static_argnames=("vertex_kernel", "edge_kernel", "method", "chunk",
                      "max_iter", "return_nodal", "fixed_iters",
-                     "pcg_variant"))
+                     "pcg_variant", "precond", "kron_rank"))
 def mgk_pairs(
     g1: GraphBatch,
     g2: GraphBatch,
@@ -264,21 +323,30 @@ def mgk_pairs(
     return_nodal: bool = False,
     fixed_iters: int | None = None,
     pcg_variant: str = "classic",
+    precond: str = "jacobi",
+    kron_rank: int = 2,
 ) -> MGKResult:
-    """Marginalized graph kernel between aligned pairs of two batches."""
+    """Marginalized graph kernel between aligned pairs of two batches.
+
+    ``precond``: "jacobi" (paper Alg. 1 line 2) or "kron" — the
+    Kronecker-factored approximate inverse of ``core/precond.py``
+    (rank ``kron_rank`` ∈ {1, 2}), which cuts PCG iteration counts at
+    identical solutions (DESIGN.md §9)."""
     sys_ = build_product_system(g1, g2, vertex_kernel)
+    B, n = g1.adjacency.shape[0], g1.adjacency.shape[1]
+    m = g2.adjacency.shape[1]
     matvec = _make_matvec(g1, g2, sys_, edge_kernel, method, chunk)
     rhs = sys_.dx * sys_.qx
-    precond = sys_.dx / sys_.vx      # paper Alg. 1 line 2
-    sol: PCGResult = pcg_solve(matvec, rhs, precond, tol=tol,
+    diag = sys_.dx / sys_.vx         # paper Alg. 1 line 2
+    papply = _make_precond_apply(precond, g1, g2, vertex_kernel,
+                                 edge_kernel, (B, n, m),
+                                 kron_rank=kron_rank)
+    sol: PCGResult = pcg_solve(matvec, rhs, diag, tol=tol,
                                max_iter=max_iter, fixed_iters=fixed_iters,
-                               variant=pcg_variant)
+                               variant=pcg_variant,
+                               precond_apply=papply)
     values = jnp.sum(sys_.px * sol.x, axis=-1)
-    nodal = None
-    if return_nodal:
-        B, n = g1.adjacency.shape[0], g1.adjacency.shape[1]
-        m = g2.adjacency.shape[1]
-        nodal = sol.x.reshape(B, n, m)
+    nodal = sol.x.reshape(B, n, m) if return_nodal else None
     return MGKResult(values=values, iterations=sol.iterations,
                      converged=sol.converged, nodal=nodal,
                      matvec_pairs=sol.matvec_pairs)
@@ -351,14 +419,20 @@ def mgk_adaptive(g1: GraphBatch, g2: GraphBatch,
                  tile: int = 8,
                  tol: float = 1e-10, max_iter: int = 512,
                  fixed_iters: int | None = None,
-                 pcg_variant: str = "classic") -> MGKResult:
+                 pcg_variant: str = "classic",
+                 precond: str = "jacobi",
+                 kron_rank: int = 2) -> MGKResult:
     """The paper's adaptive primitive switch (Sec. IV-B), lifted to the
     bucket level: pick the XMV backend per pair-batch from the octile
     density statistic AND the edge kernel's feature expansion — the
-    :func:`adaptive_route` table (DESIGN.md §3.4)."""
+    :func:`adaptive_route` table (DESIGN.md §3.4). ``precond`` rides
+    along to whichever backend wins the dispatch."""
     route, tile = adaptive_route(g1, g2, edge_kernel,
                                  density_threshold=density_threshold,
                                  tile=tile)
+    kw = dict(tol=tol, max_iter=max_iter, fixed_iters=fixed_iters,
+              pcg_variant=pcg_variant, precond=precond,
+              kron_rank=kron_rank)
     if route.startswith("sparse"):
         from repro.kernels.ops import row_panel_packs_for_batch
         ek_pack = edge_kernel if route == "sparse_mxu" else None
@@ -368,18 +442,16 @@ def mgk_adaptive(g1: GraphBatch, g2: GraphBatch,
             row_panel_packs_for_batch(g2, tile=tile, edge_kernel=ek_pack),
             vertex_kernel, edge_kernel,
             sparse_mode="mxu" if route == "sparse_mxu" else "elementwise",
-            tol=tol, max_iter=max_iter, fixed_iters=fixed_iters,
-            pcg_variant=pcg_variant)
+            **kw)
     return mgk_pairs(g1, g2, vertex_kernel, edge_kernel, method=route,
-                     tol=tol, max_iter=max_iter, fixed_iters=fixed_iters,
-                     pcg_variant=pcg_variant)
+                     **kw)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("vertex_kernel", "edge_kernel", "max_iter",
                      "return_nodal", "fixed_iters", "pcg_variant",
-                     "sparse_mode", "gram_tile"))
+                     "sparse_mode", "gram_tile", "precond", "kron_rank"))
 def mgk_pairs_sparse(
     g1: GraphBatch,
     g2: GraphBatch,
@@ -395,6 +467,10 @@ def mgk_pairs_sparse(
     fixed_iters: int | None = None,
     pcg_variant: str = "classic",
     gram_tile: tuple[int, int] | None = None,
+    precond: str = "jacobi",
+    kron_rank: int = 2,
+    factors1=None,               # optional cached KronFactors (per-pair
+    factors2=None,               # stacked, or PER-AXIS under gram_tile)
 ) -> MGKResult:
     """Block-sparse-octile variant of mgk_pairs (paper Sec. IV).
 
@@ -416,7 +492,12 @@ def mgk_pairs_sparse(
     graphs / Bj column graphs) while ``g1``/``g2`` stay the row-major
     pair-flattened batches of all B = Bi*Bj cross pairs — each matvec is
     one ``xmv_gram_tile`` launch reusing every row graph's panels across
-    its Bj partners."""
+    its Bj partners.
+
+    ``precond="kron"`` solves with the Kronecker-factored approximate
+    inverse (core/precond.py, DESIGN.md §9); ``factors1``/``factors2``
+    optionally supply pack-time cached factors (per-axis under
+    ``gram_tile``, mirroring the per-axis packs)."""
     sys_ = build_product_system(g1, g2, vertex_kernel)
     B, n = g1.adjacency.shape[0], g1.adjacency.shape[1]
     m = g2.adjacency.shape[1]
@@ -424,10 +505,15 @@ def mgk_pairs_sparse(
     matvec = _make_sparse_matvec(sys_, packs1, packs2, edge_kernel,
                                  sparse_mode, (B, n, m),
                                  gram_tile=gram_tile)
+    papply = _make_precond_apply(precond, g1, g2, vertex_kernel,
+                                 edge_kernel, (B, n, m),
+                                 gram_tile=gram_tile, factors1=factors1,
+                                 factors2=factors2, kron_rank=kron_rank)
 
     rhs = sys_.dx * sys_.qx
     sol = pcg_solve(matvec, rhs, diag, tol=tol, max_iter=max_iter,
-                    fixed_iters=fixed_iters, variant=pcg_variant)
+                    fixed_iters=fixed_iters, variant=pcg_variant,
+                    precond_apply=papply)
     values = jnp.sum(sys_.px * sol.x, axis=-1)
     nodal = sol.x.reshape(B, n, m) if return_nodal else None
     return MGKResult(values=values, iterations=sol.iterations,
@@ -451,6 +537,10 @@ def mgk_pairs_sparse_segmented(
     pcg_variant: str = "classic",
     gram_tile: tuple[int, int] | None = None,
     return_nodal: bool = False,
+    precond: str = "jacobi",
+    kron_rank: int = 2,
+    factors1=None,
+    factors2=None,
 ) -> MGKResult:
     """:func:`mgk_pairs_sparse` solved with convergence-segmented PCG
     (``core/pcg.py:pcg_solve_segmented``, DESIGN.md §8): the solve runs
@@ -467,7 +557,13 @@ def mgk_pairs_sparse_segmented(
     kernel — the usual tail is a handful of slow pairs, exactly where
     per-pair granularity is the right shape. Iterates agree with masked
     lockstep pair-for-pair; ``matvec_pairs`` is strictly smaller
-    whenever any pair converges a segment early."""
+    whenever any pair converges a segment early.
+
+    ``precond="kron"``: the Kronecker preconditioner factors remap
+    through the survivor gather/scatter like the packs do (per-axis
+    factors expand to per-pair factors alongside the pack expansion),
+    preserving the iterate-for-iterate lockstep contract under any
+    ``precond=`` (DESIGN.md §9)."""
     from repro.kernels.ops import take_row_panel_pack
 
     sys_ = build_product_system(g1, g2, vertex_kernel)
@@ -477,6 +573,16 @@ def mgk_pairs_sparse_segmented(
     matvec = _make_sparse_matvec(sys_, packs1, packs2, edge_kernel,
                                  sparse_mode, (B, n, m),
                                  gram_tile=gram_tile)
+    kron = precond == "kron"
+    if kron:
+        # materialized HERE (not just inside the apply closure) because
+        # select() re-gathers them for every compacted survivor batch
+        factors1, factors2 = _resolve_kron_factors(g1, g2, gram_tile,
+                                                   factors1, factors2)
+    papply = _make_precond_apply(precond, g1, g2, vertex_kernel,
+                                 edge_kernel, (B, n, m),
+                                 gram_tile=gram_tile, factors1=factors1,
+                                 factors2=factors2, kron_rank=kron_rank)
 
     def select(lanes):
         import numpy as np
@@ -487,20 +593,36 @@ def mgk_pairs_sparse_segmented(
             # expand the per-axis packs to per-pair packs for the
             # irregular survivor set (pair b = bi*Bj + bj, row-major)
             Bi, Bj = gram_tile
-            p1 = take_row_panel_pack(packs1, idx // Bj)
-            p2 = take_row_panel_pack(packs2, idx % Bj)
+            i1, i2 = idx // Bj, idx % Bj
+            p1 = take_row_panel_pack(packs1, i1)
+            p2 = take_row_panel_pack(packs2, i2)
         else:
+            i1 = i2 = idx
             p1 = take_row_panel_pack(packs1, idx)
             p2 = take_row_panel_pack(packs2, idx)
-        return _make_sparse_matvec(sub_sys, p1, p2, edge_kernel,
-                                   sparse_mode, (len(lanes), n, m))
+        sub_mv = _make_sparse_matvec(sub_sys, p1, p2, edge_kernel,
+                                     sparse_mode, (len(lanes), n, m))
+        if not kron:
+            return sub_mv
+        # the preconditioner factors remap through the survivor gather
+        # exactly like the packs (per-axis -> per-pair expansion
+        # included); the per-pair scalars are recomputed from the same
+        # gathered stats, so the compacted trajectory stays
+        # iterate-for-iterate identical to lockstep
+        from .precond import kron_apply, take_kron_factors
+        sub_apply = kron_apply(take_kron_factors(factors1, i1),
+                               take_kron_factors(factors2, i2),
+                               vertex_kernel, edge_kernel,
+                               (len(lanes), n, m), rank=kron_rank)
+        return sub_mv, sub_apply
 
     rhs = sys_.dx * sys_.qx
     sol = pcg_solve_segmented(matvec, rhs, diag, tol=tol,
                               max_iter=max_iter,
                               segment_size=segment_size,
                               variant=pcg_variant, select=select,
-                              pad_multiple=pad_multiple)
+                              pad_multiple=pad_multiple,
+                              precond_apply=papply)
     values = jnp.sum(sys_.px * sol.x, axis=-1)
     nodal = sol.x.reshape(B, n, m) if return_nodal else None
     return MGKResult(values=values, iterations=sol.iterations,

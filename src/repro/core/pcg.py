@@ -37,6 +37,20 @@ riding along masked to ``max_iter`` (DESIGN.md §8). Because every
 recurrence and reduction is per-pair, the compacted trajectory is
 iterate-for-iterate identical to masked lockstep.
 
+Preconditioning (``precond_apply``, DESIGN.md §9): the machines apply
+``M^{-1}`` through one hook — ``z = apply(diag, r)`` — which defaults
+to the paper's Jacobi ``r / diag`` and accepts any SPD application
+(the Kronecker-factored approximate inverse of ``core/precond.py``).
+Convergence is declared on the PRECONDITIONED residual norm
+
+    (r, M^{-1} r) <= tol² · (b, M^{-1} b)
+
+identically in every variant and in both the lockstep and segmented
+solvers: classic already computes ``rho = (r, z)`` and pipelined
+``gamma = (r, u)`` — the SAME quantity — so the criterion costs no
+extra reduction (it previously burned one on ``(r, r)``) and cannot
+drift between recurrences or between ``precond=`` choices.
+
 Differentiability: the dynamic ``while_loop`` body is NOT reverse-mode
 differentiable, and unrolling the iteration for autodiff would store
 every iterate. Gradients of solutions therefore go through the implicit
@@ -63,7 +77,7 @@ __all__ = ["PCGResult", "pcg_solve", "pcg_solve_segmented",
 class PCGResult(NamedTuple):
     x: jnp.ndarray           # [B, N] solution
     iterations: jnp.ndarray  # [B] int32 iterations to convergence
-    residual: jnp.ndarray    # [B] final ||r||^2
+    residual: jnp.ndarray    # [B] final (r, M^{-1} r) — the criterion
     converged: jnp.ndarray   # [B] bool
     # scalar int32: total pair-matvec evaluations the solve performed
     # (lockstep: B per iteration run; segmented: live pairs only). The
@@ -77,10 +91,18 @@ def _guard(x):
     return jnp.where(x == 0, jnp.asarray(1.0, x.dtype), x)
 
 
-def _thresh(b, tol):
-    eps = jnp.asarray(1e-30, b.dtype)
-    b_norm2 = jnp.maximum(jnp.sum(b * b, axis=-1), eps)   # [B]
-    return (tol * tol) * b_norm2
+def _jacobi_apply(diag, r):
+    """The default preconditioner application (paper Alg. 1 line 2)."""
+    return r / diag
+
+
+def _wrap_apply(precond_apply):
+    """Adapt the public ``precond_apply`` hook (r -> M^{-1} r, or None
+    for Jacobi) to the machines' internal ``apply(diag, r)`` signature —
+    the ONE adapter shared by the lockstep and segmented solvers."""
+    if precond_apply is None:
+        return _jacobi_apply
+    return lambda diag, r: precond_apply(r)
 
 
 # -- the two recurrence machines ---------------------------------------------
@@ -88,26 +110,35 @@ def _thresh(b, tol):
 # state: dict of per-pair arrays (EVERY leaf has the leading [B] axis, so
 # a gather/scatter remap of the batch is a tree_map) holding the iterates
 # plus the per-pair constants (diag preconditioner, convergence
-# threshold). body(matvec, state) advances one masked iteration;
+# threshold). body(matvec, apply, state) advances one masked iteration;
 # converged pairs are frozen, so running extra masked iterations — or
 # running a pair in a different batch composition — never changes its
-# trajectory (the segmented-solver contract).
+# trajectory (the segmented-solver contract). ``apply(diag, r)`` is the
+# M^{-1} application; convergence is declared on (r, M^{-1} r), which
+# both machines already compute (classic: rho; pipelined: gamma), so
+# the criterion is the IDENTICAL quantity in every variant under every
+# preconditioner — the tolerance-semantics contract of DESIGN.md §9.
 
-def _classic_init(matvec, b, diag_precond, tol):
+def _precond_thresh(rho0, tol):
+    eps = jnp.asarray(1e-30, rho0.dtype)
+    return (tol * tol) * jnp.maximum(rho0, eps)
+
+
+def _classic_init(matvec, apply_mz, b, diag_precond, tol):
     del matvec  # classic needs no setup matvec
-    thresh = _thresh(b, tol)
     r0 = b
-    z0 = r0 / diag_precond
-    res0 = jnp.sum(r0 * r0, axis=-1)
+    z0 = apply_mz(diag_precond, r0)
+    rho0 = jnp.sum(r0 * z0, axis=-1)       # (b, M^{-1} b)
+    thresh = _precond_thresh(rho0, tol)
     return dict(
         x=jnp.zeros_like(b), r=r0, p=z0,
-        rho=jnp.sum(r0 * z0, axis=-1),
-        conv=res0 <= thresh, res=res0,
+        rho=rho0,
+        conv=rho0 <= thresh, res=rho0,
         iters=jnp.zeros(b.shape[0], jnp.int32),
         diag=diag_precond, thresh=thresh)
 
 
-def _classic_body(matvec, st):
+def _classic_body(matvec, apply_mz, st):
     x, r, p, rho = st["x"], st["r"], st["p"], st["rho"]
     conv, res, thresh = st["conv"], st["res"], st["thresh"]
     active = ~conv
@@ -116,11 +147,11 @@ def _classic_body(matvec, st):
     alpha = jnp.where(active, rho / _guard(pa), 0.0)
     x = x + alpha[:, None] * p
     r = r - alpha[:, None] * a
-    z = r / st["diag"]
+    z = apply_mz(st["diag"], r)
     rho_new = jnp.sum(r * z, axis=-1)
     beta = jnp.where(active, rho_new / _guard(rho), 0.0)
     p = jnp.where(active[:, None], z + beta[:, None] * p, p)
-    res_new = jnp.where(active, jnp.sum(r * r, axis=-1), res)
+    res_new = jnp.where(active, rho_new, res)
     conv = jnp.logical_or(conv, res_new <= thresh)
     return dict(
         x=x, r=r, p=p, rho=jnp.where(active, rho_new, rho),
@@ -129,28 +160,27 @@ def _classic_body(matvec, st):
         diag=st["diag"], thresh=thresh)
 
 
-def _pipelined_init(matvec, b, diag_precond, tol):
+def _pipelined_init(matvec, apply_mz, b, diag_precond, tol):
     """Chronopoulos–Gear setup: ONE matvec (w0 = A u0)."""
-    thresh = _thresh(b, tol)
     r0 = b
-    u0 = r0 / diag_precond
+    u0 = apply_mz(diag_precond, r0)
     w0 = matvec(u0)
-    gamma0 = jnp.sum(r0 * u0, axis=-1)
+    gamma0 = jnp.sum(r0 * u0, axis=-1)     # (b, M^{-1} b)
     delta0 = jnp.sum(w0 * u0, axis=-1)
-    res0 = jnp.sum(r0 * r0, axis=-1)
-    conv0 = res0 <= thresh
+    thresh = _precond_thresh(gamma0, tol)
+    conv0 = gamma0 <= thresh
     zeros = jnp.zeros_like(b)
     return dict(
         x=jnp.zeros_like(b), r=r0, u=u0, w=w0, p=zeros, s=zeros,
         gamma=gamma0,
         alpha=jnp.where(conv0, 0.0, gamma0 / _guard(delta0)),
         beta=jnp.zeros_like(gamma0),
-        conv=conv0, res=res0,
+        conv=conv0, res=gamma0,
         iters=jnp.zeros(b.shape[0], jnp.int32),
         diag=diag_precond, thresh=thresh)
 
 
-def _pipelined_body(matvec, st):
+def _pipelined_body(matvec, apply_mz, st):
     """Single-reduction (Chronopoulos–Gear) pipelined PCG iteration.
 
     Per iteration — ONE matvec, ONE fused reduction round:
@@ -158,15 +188,16 @@ def _pipelined_body(matvec, st):
         p <- u + beta p;   s <- w + beta s        # s = A p by recurrence
         x <- x + alpha p;  r <- r - alpha s
         u = M^{-1} r;      w = A u                # the iteration's matvec
-        gamma' = (r, u);  delta = (w, u);  res = (r, r)   # fused round
+        gamma' = (r, u);  delta = (w, u)          # fused round
         beta'  = gamma' / gamma
         alpha' = gamma' / (delta - beta' * gamma' / alpha)
 
     alpha is derived from the SAME reduction round as gamma (the classic
     recurrence would need (p, A p), a second, dependent round). The
-    convergence check reads the post-update residual exactly like the
-    classic body, so iteration counts match classic to the floating-point
-    drift of the s-recurrence (±1 in practice).
+    convergence check reads gamma' = (r, M^{-1} r) — the classic body's
+    rho, post-update — so iteration counts match classic to the
+    floating-point drift of the s-recurrence (±1 in practice), and the
+    criterion needs no extra (r, r) reduction.
     """
     x, r, u, w = st["x"], st["r"], st["u"], st["w"]
     p, s = st["p"], st["s"]
@@ -179,12 +210,12 @@ def _pipelined_body(matvec, st):
     s = jnp.where(am, w + beta[:, None] * s, s)   # s = A p, recurred
     x = x + alpha[:, None] * p
     r = r - alpha[:, None] * s
-    u = jnp.where(am, r / st["diag"], u)
+    u = jnp.where(am, apply_mz(st["diag"], r), u)
     w = jnp.where(am, matvec(u), w)               # single matvec
     # -- the single fused reduction round ---------------------------
     gamma_new = jnp.sum(r * u, axis=-1)
     delta = jnp.sum(w * u, axis=-1)
-    res_new = jnp.where(active, jnp.sum(r * r, axis=-1), res)
+    res_new = jnp.where(active, gamma_new, res)
     conv = jnp.logical_or(conv, res_new <= thresh)
     still = ~conv
     beta = jnp.where(still, gamma_new / _guard(gamma), 0.0)
@@ -227,6 +258,7 @@ def pcg_solve(
     max_iter: int = 256,
     fixed_iters: int | None = None,
     variant: str = "classic",
+    precond_apply: Callable[[jnp.ndarray], jnp.ndarray] | None = None,
 ) -> PCGResult:
     """Solve ``A x = b`` for a batch of SPD systems (masked lockstep).
 
@@ -237,7 +269,9 @@ def pcg_solve(
       diag_precond: [B, N] the diagonal preconditioner M (paper Alg. 1
         line 2); entries must be > 0. Padded entries should be 1.
       tol: relative tolerance; system b is converged when
-        ||r||^2 <= tol^2 * ||b||^2.
+        (r, M^{-1} r) <= tol^2 * (b, M^{-1} b) — the preconditioned
+        residual criterion, identical across variants and solvers for
+        any preconditioner (DESIGN.md §9).
       max_iter: iteration cap (a safety net; the paper's systems are
         strongly diagonally dominant and converge in tens of iterations).
       fixed_iters: if set, run EXACTLY this many iterations as a
@@ -250,14 +284,20 @@ def pcg_solve(
         "pipelined" (Ghysels–Vanroose: one fused reduction round that
         overlaps the matvec — see module docstring). Identical iterates in
         exact arithmetic.
+      precond_apply: optional ``z = M^{-1} r`` application ([B, N] ->
+        [B, N]) replacing the Jacobi ``r / diag_precond`` — the
+        Kronecker-factored approximate inverse of ``core/precond.py``
+        plugs in here. Must be SPD; the same closure serves the adjoint
+        solve (core/adjoint.py reuses it verbatim).
 
     The result's ``matvec_pairs`` records B x (iterations run + setup
     matvecs) — the lockstep cost that :func:`pcg_solve_segmented` beats
     by retiring converged pairs at segment boundaries.
     """
     init, body = _machine(variant)
-    st0 = init(matvec, b, diag_precond, tol)
-    step = functools.partial(body, matvec)
+    apply_mz = _wrap_apply(precond_apply)
+    st0 = init(matvec, apply_mz, b, diag_precond, tol)
+    step = functools.partial(body, matvec, apply_mz)
     if fixed_iters is not None:
         def scan_body(s, _):
             return step(s), None
@@ -290,6 +330,7 @@ def pcg_solve_segmented(
     select: Callable[[np.ndarray],
                      Callable[[jnp.ndarray], jnp.ndarray]] | None = None,
     pad_multiple: int = 1,
+    precond_apply: Callable[[jnp.ndarray], jnp.ndarray] | None = None,
 ) -> PCGResult:
     """Convergence-segmented PCG with pair retirement (DESIGN.md §8).
 
@@ -309,10 +350,13 @@ def pcg_solve_segmented(
       segment_size: iterations per segment. Within a segment a converged
         pair still rides along masked (frozen); retirement happens at
         segment boundaries.
-      select: ``select(indices) -> matvec`` building the operator for a
-        compacted sub-batch, where ``indices`` is a host int array of
-        live pair indices into the original batch (the Gram-tile /
-        row-panel packs gather along their pair axis,
+      select: ``select(indices) -> matvec`` or ``-> (matvec,
+        precond_apply)`` building the operator (and, under a
+        non-Jacobi preconditioner, the matching ``M^{-1}`` application)
+        for a compacted sub-batch, where ``indices`` is a host int
+        array of live pair indices into the original batch (the
+        Gram-tile / row-panel packs — and the Kronecker preconditioner
+        factors — gather along their pair axis,
         ``core/mgk.py:mgk_pairs_sparse_segmented``). Without it no
         compaction happens — segments only add early-exit checks — and
         ``matvec_pairs`` counts the full batch per iteration.
@@ -320,6 +364,8 @@ def pcg_solve_segmented(
         repeating the first live index (bounds jit-shape diversity; the
         duplicate lanes iterate identically and only the real lanes are
         scattered back). 1 = exact compaction.
+      precond_apply: as in :func:`pcg_solve` (the full-batch
+        application; compacted sub-batches take theirs from ``select``).
 
     This is a HOST-DRIVEN loop (it cannot run under an enclosing jit);
     each segment itself runs as one compiled bounded loop.
@@ -328,7 +374,8 @@ def pcg_solve_segmented(
     if segment_size < 1:
         raise ValueError(f"segment_size must be >= 1, got {segment_size}")
     B = b.shape[0]
-    full = init(matvec, b, diag_precond, tol)
+    apply_mz = _wrap_apply(precond_apply)
+    full = init(matvec, apply_mz, b, diag_precond, tol)
     evals = B * _SETUP_MATVECS[variant]
     live = np.arange(B)           # real live indices (no pad lanes)
     lanes = live                  # live + pad lanes, the gathered batch
@@ -355,7 +402,8 @@ def pcg_solve_segmented(
         if bool(np.asarray(st["conv"]).all()):
             break
         k = min(segment_size, max_iter - done)
-        st, ran = run_segment(functools.partial(body, mv), st, k)
+        st, ran = run_segment(functools.partial(body, mv, apply_mz),
+                              st, k)
         evals += int(lanes.size) * ran
         done += ran
         if ran == 0:
@@ -381,7 +429,19 @@ def pcg_solve_segmented(
             lanes = np.concatenate([lanes, np.repeat(lanes[:1], n_pad)])
         gidx = jnp.asarray(lanes)
         st = {f: jnp.take(v, gidx, axis=0) for f, v in full.items()}
-        mv = select(lanes)
+        sel = select(lanes)
+        if isinstance(sel, tuple):
+            mv, sub_apply = sel
+            apply_mz = _wrap_apply(sub_apply)
+        else:
+            mv = sel
+            if precond_apply is not None:
+                # a full-batch M^{-1} closure cannot serve a compacted
+                # sub-batch; fail loudly instead of on a reshape deep
+                # inside the next segment
+                raise ValueError(
+                    "select must return (matvec, precond_apply) when a"
+                    " non-Jacobi precond_apply is in use")
     return _result(full, matvec_pairs=jnp.int32(evals))
 
 

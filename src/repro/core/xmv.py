@@ -35,7 +35,8 @@ import jax.numpy as jnp
 from .base_kernels import BaseKernel
 
 __all__ = ["xmv_full", "xmv_gram_full", "xmv_elementwise", "xmv_lowrank",
-           "weighted_operands", "weighted_operand_grads"]
+           "weighted_operands", "weighted_operand_grads",
+           "kron_precond_dense"]
 
 
 def _kappa(edge_kernel: BaseKernel, x, y, theta):
@@ -97,6 +98,24 @@ def xmv_elementwise(A, E, Ap, Ep, P, edge_kernel: BaseKernel,
     y0 = jnp.zeros((n, m), P.dtype)
     y, _ = jax.lax.scan(body, y0, jnp.arange(0, n, chunk))
     return y
+
+
+def kron_precond_dense(f1, f2, a, b):
+    """Dense oracle for the Kronecker-factored preconditioner
+    (DESIGN.md §9): materialize one pair's ``M^{-1}`` as the
+    [n*m, n*m] matrix
+
+        M^{-1} = a · diag(dinv ⊗ dinv') + b · (S ⊗ S')
+
+    from single-graph :class:`~repro.core.precond.KronFactors` ``f1``
+    (row graph, [n, ...] fields) and ``f2`` (column graph) and the
+    pair's scalar coefficients (``precond.kron_scalars``). Row-major
+    product flattening (ii' = i·m + i'), matching the solver's
+    ``reshape``-based application, so ``oracle @ r`` must equal
+    ``kron_apply(r)`` exactly — the validation/bench reference only
+    (O(n²m²) memory), never a production path."""
+    dd = (f1.dinv[:, None] * f2.dinv[None, :]).reshape(-1)
+    return a * jnp.diag(dd) + b * jnp.kron(f1.s, f2.s)
 
 
 def weighted_operands(A, E, edge_kernel: BaseKernel, theta=None):

@@ -61,32 +61,61 @@ class GraphPackCache:
     few floats per graph and feed the scheduler's cost model
     (``GramDriver.plan`` -> ``scheduler.estimate_cost``), replacing its
     uniform-density assumption with measured sparsity.
+
+    ``pack_dtype`` stores the pack value buffers (``values_adj`` /
+    ``values_lab`` / ``values_w`` / ``values_grad``) in a narrower
+    dtype — ``jnp.bfloat16`` halves HBM bytes per matvec while the
+    kernels keep f32 accumulators (DESIGN.md §9.4).
+
+    Kronecker-preconditioner FACTORS (``core/precond.py``) are cached
+    alongside the packs, keyed by the same (dataset index, pad):
+    computed once per graph at pack time from its degree/adjacency
+    statistics, stacked per pair batch (:meth:`stacked_factors`) or per
+    Gram-tile axis (mirroring :meth:`stacked_axis`). A few O(n²) host
+    arrays per graph; evicted and rebuilt with the packs.
     """
 
     def __init__(self, tile: int = 8, edge_kernel=None,
-                 max_entries: int = 65536, with_grad: bool = False):
+                 max_entries: int = 65536, with_grad: bool = False,
+                 pack_dtype=None):
         import collections
         self.tile = tile
         self.edge_kernel = edge_kernel
         self.max_entries = max_entries
         self.with_grad = with_grad   # also bake values_grad companions
+        self.pack_dtype = pack_dtype
         self._packs: "collections.OrderedDict" = collections.OrderedDict()
+        self._factors: "collections.OrderedDict" = \
+            collections.OrderedDict()
         self.stats: dict = {}        # (idx, pad) -> octile/nnz/density
         self.hits = 0
         self.misses = 0
 
-    def _pack(self, idx, adjacency, labels, pad_to) -> dict:
-        from repro.core.octile import octile_decompose
-        from repro.kernels.xmv_block_sparse import pack_row_panels
-        key = (int(idx), int(pad_to))
-        hit = self._packs.get(key)
+    def _lru_get(self, store, key, build) -> dict:
+        """Shared LRU lookup for the pack and factor stores: counts
+        hits/misses (both stores feed the same counters), bounds each
+        store at ``max_entries``, builds on miss."""
+        hit = store.get(key)
         if hit is not None:
             self.hits += 1
-            self._packs.move_to_end(key)
+            store.move_to_end(key)
             return hit
         self.misses += 1
-        while len(self._packs) >= self.max_entries:
-            self._packs.popitem(last=False)
+        while len(store) >= self.max_entries:
+            store.popitem(last=False)
+        entry = build()
+        store[key] = entry
+        return entry
+
+    def _pack(self, idx, adjacency, labels, pad_to) -> dict:
+        key = (int(idx), int(pad_to))
+        return self._lru_get(self._packs, key,
+                             lambda: self._build_pack(key, adjacency,
+                                                      labels))
+
+    def _build_pack(self, key, adjacency, labels) -> dict:
+        from repro.core.octile import octile_decompose
+        from repro.kernels.xmv_block_sparse import pack_row_panels
         oset = octile_decompose(adjacency, labels, tile=self.tile)
         nt = oset.n_tiles_side
         self.stats[key] = {
@@ -98,10 +127,45 @@ class GraphPackCache:
         # as_numpy: the cache re-pads and stacks host-side; the single
         # device transfer happens in stacked()
         p = pack_row_panels(oset, edge_kernel=self.edge_kernel,
-                            as_numpy=True, with_grad=self.with_grad)
-        entry = {f: getattr(p, f) for f in type(p)._fields}
-        self._packs[key] = entry
-        return entry
+                            as_numpy=True, with_grad=self.with_grad,
+                            pack_dtype=self.pack_dtype)
+        return {f: getattr(p, f) for f in type(p)._fields}
+
+    def _factor(self, idx, batch: GraphBatch, b: int, pad_to) -> dict:
+        """Per-graph Kronecker-preconditioner factors, cached like the
+        packs (host numpy at the graph's padded size; same LRU bound
+        and hit/miss counters, in their own store)."""
+        from repro.core.precond import KronFactors, kron_factor_arrays
+
+        def build():
+            f = kron_factor_arrays(
+                np.asarray(batch.adjacency[b]),
+                np.asarray(batch.degrees[b]),
+                np.asarray(batch.edge_labels[b]),
+                np.asarray(batch.vertex_labels[b]),
+                np.asarray(batch.node_mask[b]))
+            return {name: np.asarray(getattr(f, name))
+                    for name in KronFactors._fields}
+
+        return self._lru_get(self._factors, (int(idx), int(pad_to)),
+                             build)
+
+    def stacked_factors(self, indices, batch: GraphBatch):
+        """Stacked :class:`~repro.core.precond.KronFactors` for one pair
+        batch (or, called with the UNIQUE graphs of a Gram-tile axis,
+        the per-axis factors — the factor analog of
+        :meth:`stacked_axis`). Indexing contract as :meth:`stacked`:
+        entries beyond ``len(indices)`` are dummy pairs (index -1)."""
+        from repro.core.precond import KronFactors
+        B = batch.adjacency.shape[0]
+        pad_to = batch.adjacency.shape[1]
+        entries = []
+        for b in range(B):
+            idx = int(indices[b]) if b < len(indices) else -1
+            entries.append(self._factor(idx, batch, b, pad_to))
+        return KronFactors(**{
+            name: jnp.asarray(np.stack([e[name] for e in entries]))
+            for name in KronFactors._fields})
 
     def density(self, idx: int, pad_to: int) -> float | None:
         """Measured octile occupancy of graph ``idx`` at bucket pad
@@ -246,8 +310,20 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
                    segment_size: int | None = None,
                    segment_pad: int = 1,
                    pack_cache_entries: int = 65536,
-                   with_grad: bool = False) -> Callable:
+                   with_grad: bool = False,
+                   precond: str = "jacobi",
+                   kron_rank: int = 2,
+                   pack_dtype=None) -> Callable:
     """Build the pair-solve step for a mesh.
+
+    ``precond="kron"`` solves every block (forward and, under
+    ``with_grad``, adjoint) with the Kronecker-factored approximate
+    inverse (core/precond.py, DESIGN.md §9); on the sparse path the
+    per-graph factors come from the SAME pack cache as the octile
+    panels — computed once per (graph, bucket pad), stacked per pair
+    block or per Gram-tile axis. ``pack_dtype=jnp.bfloat16`` streams
+    the pack value buffers at half the HBM bytes per matvec (f32
+    accumulation in-kernel, §9.4).
 
     ``with_grad=True`` builds a GRADIENT step instead: each pair block
     returns ``(MGKResult, {"vertex.h": [B], "edge.alpha": [B], ...})`` —
@@ -292,6 +368,7 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
     diversity). Mutually exclusive with ``fixed_iters``."""
     solve_kw = dict(tol=tol, max_iter=max_iter, fixed_iters=fixed_iters,
                     pcg_variant=pcg_variant)
+    precond_kw = dict(precond=precond, kron_rank=kron_rank)
     if method == "pallas_sparse":
         from repro.core.mgk import mgk_pairs_sparse_segmented
         from repro.kernels.ops import row_panel_packs_for_batch
@@ -321,7 +398,8 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
             if sparse_mode == "auto" else None
         cache = GraphPackCache(tile=tile, edge_kernel=ek_pack,
                                max_entries=pack_cache_entries,
-                               with_grad=with_grad)
+                               with_grad=with_grad,
+                               pack_dtype=pack_dtype)
 
         def _resolve_block_mode(g1, g2):
             if mode == "mxu" and domain is not None:
@@ -331,10 +409,16 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
                     return "elementwise"
             return mode
 
+        kron = precond == "kron"
+
         def _block_packs(g1, g2, rows, cols):
-            """(packs1, packs2, mode, gram_tile_shape) for one block:
-            per-AXIS packs + (Bi, Bj) when the block is a rectangle and
-            gram_tile execution is on, else per-pair packs + None."""
+            """(packs1, packs2, mode, gram_tile_shape, factors) for one
+            block: per-AXIS packs + (Bi, Bj) when the block is a
+            rectangle and gram_tile execution is on, else per-pair
+            packs + None. ``factors`` are the cached Kronecker
+            preconditioner factors — stacked with the SAME granularity
+            as the packs (per-axis / per-pair) — or (None, None) under
+            Jacobi."""
             block_mode = _resolve_block_mode(g1, g2)
             axes = _axis_structure(rows, cols) \
                 if gram_tile and rows is not None and cols is not None \
@@ -356,7 +440,10 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
                 # per-pair kernel, whose P BlockSpec streams instead
                 if gram_tile_vmem_bytes(p1, p2, block_mode == "mxu") \
                         <= _GRAM_TILE_VMEM_BUDGET:
-                    return p1, p2, block_mode, (Bi, Bj)
+                    facs = (cache.stacked_factors(urows, g1u),
+                            cache.stacked_factors(ucols, g2u)) \
+                        if kron else (None, None)
+                    return p1, p2, block_mode, (Bi, Bj), facs
             if rows is None or cols is None:
                 p1 = row_panel_packs_for_batch(g1, tile=tile,
                                                edge_kernel=ek_pack,
@@ -364,10 +451,14 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
                 p2 = row_panel_packs_for_batch(g2, tile=tile,
                                                edge_kernel=ek_pack,
                                                with_grad=with_grad)
+                facs = (None, None)   # uncached: factors derived in-trace
             else:
                 p1 = cache.stacked(rows, g1)
                 p2 = cache.stacked(cols, g2)
-            return p1, p2, block_mode, None
+                facs = (cache.stacked_factors(rows, g1),
+                        cache.stacked_factors(cols, g2)) \
+                    if kron else (None, None)
+            return p1, p2, block_mode, None, facs
 
         if with_grad:
             from repro.core.adjoint import flatten_grads, kernel_theta, \
@@ -375,12 +466,14 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
             theta = kernel_theta(vertex_kernel, edge_kernel)
 
             def grad_sparse_step(g1, g2, rows=None, cols=None):
-                p1, p2, block_mode, gt = _block_packs(g1, g2, rows, cols)
+                p1, p2, block_mode, gt, facs = _block_packs(g1, g2,
+                                                            rows, cols)
                 fn = mgk_value_fn(g1, g2, vertex_kernel, edge_kernel,
                                   method="sparse", packs1=p1, packs2=p2,
                                   sparse_mode=block_mode,
                                   trust_pack_weights=True, gram_tile=gt,
-                                  **solve_kw)
+                                  precond_factors=facs,
+                                  **solve_kw, **precond_kw)
                 vals, grads, sol = fn.value_and_pair_grads(theta,
                                                            with_aux=True)
                 res = MGKResult(values=vals, iterations=sol.iterations,
@@ -395,18 +488,23 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
 
         def sparse_step(g1: GraphBatch, g2: GraphBatch,
                         rows=None, cols=None) -> MGKResult:
-            p1, p2, block_mode, gt = _block_packs(g1, g2, rows, cols)
+            p1, p2, block_mode, gt, facs = _block_packs(g1, g2,
+                                                        rows, cols)
+            f1, f2 = facs
             if segment_size is not None:
                 res = mgk_pairs_sparse_segmented(
                     g1, g2, p1, p2, vertex_kernel, edge_kernel,
                     sparse_mode=block_mode, tol=tol, max_iter=max_iter,
                     segment_size=segment_size, pad_multiple=segment_pad,
-                    pcg_variant=pcg_variant, gram_tile=gt)
+                    pcg_variant=pcg_variant, gram_tile=gt,
+                    factors1=f1, factors2=f2, **precond_kw)
             else:
                 res = mgk_pairs_sparse(g1, g2, p1, p2, vertex_kernel,
                                        edge_kernel,
                                        sparse_mode=block_mode,
-                                       gram_tile=gt, **solve_kw)
+                                       gram_tile=gt, factors1=f1,
+                                       factors2=f2, **solve_kw,
+                                       **precond_kw)
             return MGKResult(values=res.values, iterations=res.iterations,
                              converged=res.converged, nodal=None,
                              matvec_pairs=res.matvec_pairs)
@@ -423,7 +521,7 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
 
         def grad_step(g1: GraphBatch, g2: GraphBatch):
             fn = mgk_value_fn(g1, g2, vertex_kernel, edge_kernel,
-                              method=method, **solve_kw)
+                              method=method, **solve_kw, **precond_kw)
             vals, grads, sol = fn.value_and_pair_grads(theta,
                                                        with_aux=True)
             res = MGKResult(values=vals, iterations=sol.iterations,
@@ -437,7 +535,7 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
 
     def step(g1: GraphBatch, g2: GraphBatch) -> MGKResult:
         res = mgk_pairs(g1, g2, vertex_kernel, edge_kernel, method=method,
-                        **solve_kw)
+                        **solve_kw, **precond_kw)
         return MGKResult(values=res.values, iterations=res.iterations,
                          converged=res.converged, nodal=None)
 
@@ -537,6 +635,9 @@ class GramDriver:
     segment_size: int | None = None        # segmented PCG (sparse only)
     segment_pad: int = 1
     pack_cache_entries: int = 65536        # GraphPackCache LRU bound
+    precond: str = "jacobi"                # "jacobi" | "kron" (§9)
+    kron_rank: int = 2                     # Kronecker terms, 1 or 2
+    pack_dtype: object = None              # e.g. jnp.bfloat16 (§9.4)
     normalize: bool = True
 
     def __post_init__(self):
@@ -559,7 +660,8 @@ class GramDriver:
             1, self.mesh.devices.size // self._pair_width())
         return replan(blocks, done, n_groups,
                       densities=self._block_densities(blocks),
-                      iters=self._block_iters(blocks, done))
+                      iters=self._block_iters(blocks, done),
+                      precond=self.precond)
 
     def _block_densities(self, blocks) -> dict[int, float] | None:
         """Measured per-block octile occupancy from the pack cache's
@@ -651,7 +753,10 @@ class GramDriver:
                               segment_size=self.segment_size,
                               segment_pad=self.segment_pad,
                               pack_cache_entries=self.pack_cache_entries,
-                              with_grad=with_grad)
+                              with_grad=with_grad,
+                              precond=self.precond,
+                              kron_rank=self.kron_rank,
+                              pack_dtype=self.pack_dtype)
         self._pack_cache = getattr(step, "pack_cache", None)
         blocks = self.blocks()
         by_id = {b.block_id: b for b in blocks}

@@ -24,11 +24,22 @@ import numpy as np
 
 from repro.data.loader import PairBlock
 
-__all__ = ["SchedulePlan", "make_plan", "replan", "estimate_cost"]
+__all__ = ["SchedulePlan", "make_plan", "replan", "estimate_cost",
+           "DEFAULT_ITERS"]
+
+# prior iteration counts per preconditioner type, used for blocks no
+# measurement exists for yet: the Kronecker-factored approximate
+# inverse (core/precond.py, DESIGN.md §9) reaches tolerance in ≥30%
+# fewer PCG iterations than Jacobi on the BENCH_pcg fixtures, so a
+# kron-preconditioned fleet's cost model must not assume Jacobi trip
+# counts — it would systematically over-reserve capacity per block and
+# skew the LPT placement toward stale load estimates.
+DEFAULT_ITERS = {"jacobi": 32.0, "kron": 20.0}
 
 
 def estimate_cost(block: PairBlock, density: float = 1.0,
-                  iters: float = 32.0) -> float:
+                  iters: float | None = None,
+                  precond: str = "jacobi") -> float:
     """Predicted work of a block: Sum_pairs (n*m)^2 * density^2 * iters.
 
     density is the mean octile occupancy after reordering (1.0 = dense);
@@ -36,9 +47,12 @@ def estimate_cost(block: PairBlock, density: float = 1.0,
     by measurements when available: the Gram driver's `GraphPackCache`
     records each graph's real octile occupancy at pack time, and
     finished blocks report their per-pair CG iteration counts
-    (``PCGResult.iterations``) — see ``GramDriver.plan``. The uniform
-    defaults only cover blocks no measurement exists for yet.
+    (``PCGResult.iterations``) — see ``GramDriver.plan``. Blocks no
+    measurement exists for yet fall back to the ``DEFAULT_ITERS`` prior
+    KEYED ON THE PRECONDITIONER TYPE (``iters=None``).
     """
+    if iters is None:
+        iters = DEFAULT_ITERS.get(precond, DEFAULT_ITERS["jacobi"])
     return block.cost() * (density ** 2) * iters
 
 
@@ -62,16 +76,19 @@ class SchedulePlan:
 def make_plan(blocks: list[PairBlock], n_groups: int,
               densities: dict[int, float] | None = None,
               speculate_tail: float = 0.05,
-              iters: dict[int, float] | None = None) -> SchedulePlan:
+              iters: dict[int, float] | None = None,
+              precond: str = "jacobi") -> SchedulePlan:
     """LPT greedy placement of blocks onto n_groups device groups.
 
     ``densities``/``iters`` map block ids to measured per-block octile
     occupancy and predicted CG iteration counts (blocks absent from the
-    dicts use the uniform :func:`estimate_cost` defaults)."""
+    dicts use the :func:`estimate_cost` defaults — the iteration prior
+    keyed on ``precond``)."""
     densities = densities or {}
     iters = iters or {}
     costs = np.array([estimate_cost(b, densities.get(b.block_id, 1.0),
-                                    iters.get(b.block_id, 32.0))
+                                    iters.get(b.block_id),
+                                    precond=precond)
                       for b in blocks])
     order = np.argsort(-costs)  # heaviest first
     loads = np.zeros(n_groups)
@@ -100,8 +117,10 @@ def make_plan(blocks: list[PairBlock], n_groups: int,
 
 def replan(blocks: list[PairBlock], done_ids: set[int], n_groups: int,
            densities: dict[int, float] | None = None,
-           iters: dict[int, float] | None = None) -> SchedulePlan:
+           iters: dict[int, float] | None = None,
+           precond: str = "jacobi") -> SchedulePlan:
     """Elastic re-planning: schedule only the not-yet-done blocks for the
     *current* group count. Deterministic given (blocks, done, n_groups)."""
     remaining = [b for b in blocks if b.block_id not in done_ids]
-    return make_plan(remaining, n_groups, densities, iters=iters)
+    return make_plan(remaining, n_groups, densities, iters=iters,
+                     precond=precond)

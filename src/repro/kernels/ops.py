@@ -91,19 +91,22 @@ def packs_for_batch(batch, tile: int = 8) -> TilePack:
 
 
 def row_panel_packs_for_batch(batch, tile: int = 8, edge_kernel=None,
-                              with_grad: bool = False) -> RowPanelPack:
+                              with_grad: bool = False,
+                              pack_dtype=None) -> RowPanelPack:
     """Host-side: octile-decompose every graph of a GraphBatch into
     row-panel packs stacked to shared shapes (slot counts padded to the
     bucket max). Pass ``edge_kernel`` with a feature expansion to also
     precompute the MXU contraction operands (``values_w``);
-    ``with_grad`` adds the ``values_grad`` adjoint companions."""
+    ``with_grad`` adds the ``values_grad`` adjoint companions.
+    ``pack_dtype=jnp.bfloat16`` streams the value buffers at half the
+    HBM bytes per matvec (f32 in-kernel accumulation, DESIGN.md §9.4)."""
     import numpy as np
     osets = _bucket_osets(batch, tile)
     k_max = max(max((np.bincount(o.coords[:, 0]).max(initial=0)
                      if o.n_nonempty else 0) for o in osets), 1)
     return stack_row_panel_packs(
         [pack_row_panels(o, edge_kernel=edge_kernel, k_max=int(k_max),
-                         with_grad=with_grad)
+                         with_grad=with_grad, pack_dtype=pack_dtype)
          for o in osets])
 
 

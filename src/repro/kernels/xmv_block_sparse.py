@@ -229,10 +229,21 @@ def pack_octiles(oset: OctileSet, k_max: int | None = None,
                     values_grad=vg)
 
 
+def resolve_pack_dtype(pack_dtype):
+    """Normalize the ``pack_dtype`` knob to a numpy dtype (None -> f32;
+    "bfloat16" strings resolve through jax's ml_dtypes registration)."""
+    if pack_dtype is None:
+        return np.dtype(np.float32)
+    if isinstance(pack_dtype, str) and pack_dtype == "bfloat16":
+        return np.dtype(jnp.bfloat16)
+    return np.dtype(pack_dtype)
+
+
 def pack_row_panels(oset: OctileSet, edge_kernel=None,
                     k_max: int | None = None,
                     as_numpy: bool = False,
-                    with_grad: bool = False) -> RowPanelPack:
+                    with_grad: bool = False,
+                    pack_dtype=None) -> RowPanelPack:
     """Host-side: lay an OctileSet out as contiguous VMEM-ready row panels.
 
     With ``edge_kernel`` carrying a feature expansion
@@ -247,7 +258,15 @@ def pack_row_panels(oset: OctileSet, edge_kernel=None,
 
     ``as_numpy`` keeps the fields as host arrays (for caching layers that
     re-pad and stack before the single device transfer).
+
+    ``pack_dtype`` stores the VALUE buffers (``values_adj`` /
+    ``values_lab`` / ``values_w`` / ``values_grad``) in a narrower
+    dtype — ``jnp.bfloat16`` halves the HBM bytes every matvec streams
+    while the kernels keep f32 accumulators (operands are upcast in
+    VMEM before compute; DESIGN.md §9.4). Index/count arrays stay
+    int32. f32 packing is bit-exact as before.
     """
+    dtype = resolve_pack_dtype(pack_dtype)
     t, nt = oset.tile, oset.n_tiles_side
     real = oset.coords[:, 0] >= 0
     rows = oset.coords[real, 0].astype(np.int64)
@@ -259,25 +278,26 @@ def pack_row_panels(oset: OctileSet, edge_kernel=None,
         k_max = max(int(counts.max(initial=0)), 1)
     elif counts.max(initial=0) > k_max:
         raise ValueError(f"k_max={k_max} < max tiles per row {counts.max()}")
-    va = np.zeros((nt, k_max, t, t), np.float32)
-    ve = np.zeros((nt, k_max, t, t), np.float32)
+    va = np.zeros((nt, k_max, t, t), dtype)
+    ve = np.zeros((nt, k_max, t, t), dtype)
     col = np.zeros((nt, k_max), np.int32)
-    va[rows, pos] = vals_a
-    ve[rows, pos] = vals_e
+    va[rows, pos] = vals_a.astype(dtype)
+    ve[rows, pos] = vals_e.astype(dtype)
     col[rows, pos] = cols
     vw = vg = None
     if edge_kernel is not None and edge_kernel.feature_rank() is not None:
         from repro.core.octile import feature_operands
         with_grad = with_grad and bool(edge_kernel.param_names())
+        # operand derivation runs in f32; only the STORED buffers narrow
         w, wg = feature_operands(vals_a, vals_e, edge_kernel,
                                  with_grad=with_grad)
         R = w.shape[-3]
-        vw = np.zeros((nt, k_max, R, t, t), np.float32)
-        vw[rows, pos] = np.asarray(w, np.float32)
+        vw = np.zeros((nt, k_max, R, t, t), dtype)
+        vw[rows, pos] = np.asarray(w, np.float32).astype(dtype)
         if wg is not None:
             P = wg.shape[-4]
-            vg = np.zeros((nt, k_max, P, R, t, t), np.float32)
-            vg[rows, pos] = np.asarray(wg, np.float32)
+            vg = np.zeros((nt, k_max, P, R, t, t), dtype)
+            vg[rows, pos] = np.asarray(wg, np.float32).astype(dtype)
     dev = (lambda x: x) if as_numpy else jnp.asarray
     opt = lambda x: None if x is None else dev(x)   # noqa: E731
     return RowPanelPack(values_adj=dev(va),
@@ -299,13 +319,15 @@ def pack_graph(adjacency, edge_labels=None, tile: int = 8,
 
 def pack_graph_row_panels(adjacency, edge_labels=None, tile: int = 8,
                           edge_kernel=None, k_max: int | None = None,
-                          with_grad: bool = False) -> RowPanelPack:
+                          with_grad: bool = False,
+                          pack_dtype=None) -> RowPanelPack:
     """Convenience: dense matrix -> RowPanelPack."""
     return pack_row_panels(
         octile_decompose(np.asarray(adjacency),
                          None if edge_labels is None
                          else np.asarray(edge_labels), tile=tile),
-        edge_kernel=edge_kernel, k_max=k_max, with_grad=with_grad)
+        edge_kernel=edge_kernel, k_max=k_max, with_grad=with_grad,
+        pack_dtype=pack_dtype)
 
 
 def device_weighted_pack(pack: RowPanelPack, edge_kernel, theta=None,
@@ -319,16 +341,30 @@ def device_weighted_pack(pack: RowPanelPack, edge_kernel, theta=None,
     host precompute bakes the kernel's static parameter values in, so the
     differentiable path re-derives the operands from ``values_lab`` once
     per solve — O(nnz·R) work amortized over every CG iteration, leaving
-    the Pallas kernel untouched (DESIGN.md §7)."""
+    the Pallas kernel untouched (DESIGN.md §7). bf16-stored packs
+    (``pack_dtype``) upcast before derivation so the feature math and
+    the resulting operands stay f32."""
     from repro.core.octile import feature_operands
-    w, wg = feature_operands(pack.values_adj, pack.values_lab, edge_kernel,
-                             theta=theta, with_grad=with_grad)
+    w, wg = feature_operands(pack.values_adj.astype(jnp.float32),
+                             pack.values_lab.astype(jnp.float32),
+                             edge_kernel, theta=theta,
+                             with_grad=with_grad)
     return pack._replace(values_w=w, values_grad=wg)
 
 
 def _contrib(a, e, ap, ep, p, edge_kernel, acc_dtype, theta=None):
     """One octile-pair contribution: contract the regenerated [t,t,t,t]
-    product-weight block with the [t, t] P block -> [t, t]."""
+    product-weight block with the [t, t] P block -> [t, t].
+
+    Operands are upcast to the accumulator dtype BEFORE any product so
+    bf16-streamed packs (``pack_dtype``) regenerate edge-kernel values
+    and adjacency products in f32 — storage precision costs one
+    rounding of the inputs, never compounded kernel math (re-cast here
+    so the contract holds regardless of caller-side casts)."""
+    a = a.astype(acc_dtype)
+    ap = ap.astype(acc_dtype)
+    e = e.astype(acc_dtype)
+    ep = ep.astype(acc_dtype)
     if theta is None:
         kappa = edge_kernel(e[:, :, None, None], ep[None, None, :, :])
     else:
@@ -344,7 +380,11 @@ def _mxu_contrib(w, wp, p, acc_dtype):
 
     w/wp: [R, t, t] pre-weighted tiles ``a ∘ f_r(e)``; p: [t, t].
     Two rank-batched matmuls replace the t^4 broadcast tensor.
+    Operands upcast to the accumulator dtype (bf16 ``pack_dtype``
+    streams half the HBM bytes; the MXU contraction stays f32).
     """
+    w = w.astype(acc_dtype)
+    wp = wp.astype(acc_dtype)
     tmp = jax.lax.dot_general(            # [R, t, t]: w_r @ P
         w, p, (((2,), (0,)), ((), ())), preferred_element_type=acc_dtype)
     out = jax.lax.dot_general(            # [R, t, t]: (w_r @ P) @ w'_r^T
@@ -689,8 +729,11 @@ def _gram_tile_kernel(col1, cnt1, col2, cnt2,   # scalar-prefetch refs
 def gram_tile_vmem_bytes(packs_i: RowPanelPack, packs_j: RowPanelPack,
                          mxu: bool) -> int:
     """Per-grid-step VMEM envelope of :func:`xmv_gram_tile` in bytes
-    (f32, x2 for the pipeline's double buffering): graph j's whole
+    (x2 for the pipeline's double buffering): graph j's whole
     pack + graph i's tile row + the P panel + the diag/out strips.
+    Pack operands are costed at their STORED itemsize — bf16 packs
+    (``pack_dtype``) halve the operand share of the envelope, which is
+    exactly what lets larger tiles stay on the Gram-tile kernel.
     ``gram_pair_step`` uses this to route over-budget buckets to the
     per-pair :func:`xmv_row_panel_batched` automatically."""
     t = packs_i.tile
@@ -699,11 +742,12 @@ def gram_tile_vmem_bytes(packs_i: RowPanelPack, packs_j: RowPanelPack,
     n, m = nt * t, mt * t
     ci = packs_i.rank if (mxu and packs_i.rank) else 2
     cj = packs_j.rank if (mxu and packs_j.rank) else 2
-    per_step = (ka * ci * t * t          # graph i's tile row
-                + mt * kb * cj * t * t   # graph j's whole pack
-                + n * m                  # the pair's P panel
-                + 2 * t * m)             # diag + out strips
-    return 8 * per_step                  # 4 bytes x double buffering
+    pack_bytes = np.dtype(packs_i.values_adj.dtype).itemsize
+    operands = (ka * ci * t * t          # graph i's tile row
+                + mt * kb * cj * t * t)  # graph j's whole pack
+    fp32 = (n * m                        # the pair's P panel
+            + 2 * t * m)                 # diag + out strips
+    return 2 * (pack_bytes * operands + 4 * fp32)  # double buffered
 
 
 @functools.partial(jax.jit, static_argnames=("edge_kernel", "interpret",

@@ -139,7 +139,9 @@ def make_gp_nlml(ds, y, vertex_kernel, edge_kernel, *,
                  method: str = "lowrank", noise: float = 1e-4,
                  tol: float = 1e-10, max_iter: int = 512,
                  fixed_iters: int | None = None,
-                 pcg_variant: str = "classic") -> Callable:
+                 pcg_variant: str = "classic",
+                 precond: str = "jacobi",
+                 kron_rank: int = 2) -> Callable:
     """Build ``nlml(theta) -> scalar`` over a BucketedDataset.
 
     All (i <= j) pairs are grouped by (bucket_i, bucket_j) into aligned
@@ -154,7 +156,10 @@ def make_gp_nlml(ds, y, vertex_kernel, edge_kernel, *,
     gradients w.r.t. every hyperparameter (q included) flow through
     cholesky/assembly natively and through each MGK solve via its
     custom VJP — two PCG solves per pair batch per step, regardless of
-    the number of hyperparameters.
+    the number of hyperparameters. ``precond="kron"`` runs both solves
+    with the Kronecker-factored preconditioner (DESIGN.md §9) — per
+    optimization step the hyperparameters move but the factors (pure
+    graph statistics) don't, so they are built once per group here.
     """
     from repro.core.adjoint import mgk_value_fn
     N = len(ds)
@@ -173,7 +178,8 @@ def make_gp_nlml(ds, y, vertex_kernel, edge_kernel, *,
         fn = mgk_value_fn(g1, g2, vertex_kernel, edge_kernel,
                           method=method, tol=tol, max_iter=max_iter,
                           fixed_iters=fixed_iters,
-                          pcg_variant=pcg_variant)
+                          pcg_variant=pcg_variant, precond=precond,
+                          kron_rank=kron_rank)
         fns.append((np.array(rows), np.array(cols), fn))
 
     def nlml(theta):

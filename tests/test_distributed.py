@@ -293,3 +293,80 @@ def test_array_checkpoint_roundtrip_and_fallback(tmp_path):
         f.write(b"\xde\xad\xbe\xef")
     restored, step = load_array_checkpoint(str(tmp_path), tree)
     assert step == 10
+
+
+def test_gram_driver_kron_precond_matches_jacobi():
+    """The full distributed kron path (cached factors: per-pair,
+    per-axis gram-tile, and segmented retirement) must reproduce the
+    Jacobi driver's Gram matrix — the preconditioner only changes the
+    solve trajectory (DESIGN.md §9)."""
+    import jax.numpy as jnp
+    ds = _dataset(6)
+    mesh = _mesh()
+    base = dict(ds=ds, mesh=mesh, vertex_kernel=VK, edge_kernel=EK,
+                method="pallas_sparse", tol=1e-8)
+    ref = GramDriver(**base).run()
+    for extra in (dict(),                                   # per-pair
+                  dict(gram_tile=True, tile_shape=(2, 2)),  # per-axis
+                  dict(gram_tile=True, tile_shape=(2, 2),
+                       segment_size=4)):                    # retirement
+        K = GramDriver(**base, precond="kron", **extra).run()
+        np.testing.assert_allclose(K, ref, rtol=1e-5, atol=1e-7)
+    # factors are cached once per (graph, pad): a second run through
+    # the same driver instance reuses them
+    d = GramDriver(**base, precond="kron")
+    d.run()
+    cache = d._pack_cache
+    assert cache is not None and len(cache._factors) > 0
+    # bf16 pack streaming through the driver: same Gram at bf16
+    # resolution, and the cached pack buffers really are bfloat16
+    db = GramDriver(**base, precond="kron", pack_dtype=jnp.bfloat16)
+    Kb = db.run()
+    np.testing.assert_allclose(Kb, ref, rtol=3e-2, atol=1e-3)
+    entry = next(iter(db._pack_cache._packs.values()))
+    assert entry["values_adj"].dtype == jnp.bfloat16
+
+
+def test_gram_driver_kron_grad_matches_jacobi():
+    """run_with_grad under precond='kron' (adjoint reuses the cached
+    factors via precond_factors/trust_pack_weights) matches Jacobi's
+    gradient Gram blocks."""
+    ds = _dataset(5)
+    mesh = _mesh()
+    base = dict(ds=ds, mesh=mesh, vertex_kernel=VK, edge_kernel=EK,
+                method="pallas_sparse", tol=1e-10)
+    Kj, Gj = GramDriver(**base).run_with_grad()
+    Kk, Gk = GramDriver(**base, precond="kron",
+                        gram_tile=True,
+                        tile_shape=(2, 2)).run_with_grad()
+    np.testing.assert_allclose(Kk, Kj, rtol=1e-5, atol=1e-7)
+    assert sorted(Gk) == sorted(Gj)
+    for key in Gj:
+        np.testing.assert_allclose(Gk[key], Gj[key], rtol=1e-3,
+                                   atol=1e-6)
+
+
+def test_gram_tile_vmem_bytes_tracks_pack_dtype():
+    """The Gram-tile VMEM estimator must cost packs at their stored
+    itemsize — bf16 packs halve the operand share, which is what lets
+    larger tiles stay on the single-launch kernel."""
+    import jax.numpy as jnp
+    from repro.kernels.ops import row_panel_packs_for_batch
+    from repro.kernels.xmv_block_sparse import gram_tile_vmem_bytes
+    from repro.core import batch_from_graphs
+    gs = [g for g in make_drugbank_like_dataset(10, seed=7)
+          if 6 <= g.n_nodes <= 24][:4]
+    g1 = batch_from_graphs(gs[:2], pad_to=24)
+    g2 = batch_from_graphs(gs[2:], pad_to=24)
+    pf1 = row_panel_packs_for_batch(g1, edge_kernel=EK)
+    pf2 = row_panel_packs_for_batch(g2, edge_kernel=EK)
+    pb1 = row_panel_packs_for_batch(g1, edge_kernel=EK,
+                                    pack_dtype=jnp.bfloat16)
+    pb2 = row_panel_packs_for_batch(g2, edge_kernel=EK,
+                                    pack_dtype=jnp.bfloat16)
+    for mxu in (False, True):
+        f32 = gram_tile_vmem_bytes(pf1, pf2, mxu)
+        bf16 = gram_tile_vmem_bytes(pb1, pb2, mxu)
+        assert bf16 < f32
+        # operand share halves exactly; the f32 P/diag/out share stays
+        assert f32 - bf16 == (f32 - 8 * (24 * 24 + 2 * 8 * 24)) // 2

@@ -131,6 +131,51 @@ def test_per_pair_grads_sum_to_vjp():
                                    rtol=1e-5, atol=1e-7)
 
 
+# -- Kronecker-preconditioned solves (DESIGN.md §9) ------------------------
+#
+# precond="kron" changes the PCG trajectory, never the solution, so FD
+# parity must hold unchanged on every dispatch route — forward AND
+# adjoint solve share the identical SPD M^{-1} closure.
+
+@pytest.mark.parametrize("route", ["lowrank", "pallas", "sparse-vpu",
+                                   "sparse-mxu"])
+def test_kron_precond_paths_match_fd(route):
+    if route in ("lowrank", "pallas"):
+        g1, g2 = _dense_batches()
+        ek = SE if route == "lowrank" else CP
+        fn = mgk_value_fn(g1, g2, VK, ek, method=route, tol=1e-12,
+                          precond="kron")
+        gradcheck(fn, kernel_theta(VK, ek, q=0.2))
+        return
+    g1, g2 = _sparse_batches()
+    mode = "mxu" if route == "sparse-mxu" else "elementwise"
+    ek = SE if mode == "mxu" else CP
+    ek_pack = ek if mode == "mxu" else None
+    p1 = row_panel_packs_for_batch(g1, edge_kernel=ek_pack)
+    p2 = row_panel_packs_for_batch(g2, edge_kernel=ek_pack)
+    fn = mgk_value_fn(g1, g2, VK, ek, method="sparse", packs1=p1,
+                      packs2=p2, sparse_mode=mode, tol=1e-12,
+                      precond="kron")
+    gradcheck(fn, kernel_theta(VK, ek, q=0.05))
+
+
+def test_kron_adaptive_entry_matches_jacobi_grads():
+    """mgk_adaptive_value_and_grad with precond='kron' must produce the
+    same per-pair gradients as Jacobi (identical solutions at tight
+    tolerance) on both a dense- and a sparse-routed batch."""
+    for batches in (_dense_batches(), _sparse_batches()):
+        g1, g2 = batches
+        vj, gj = mgk_adaptive_value_and_grad(g1, g2, VK, SE, q=0.1,
+                                             tol=1e-12)
+        vk, gk = mgk_adaptive_value_and_grad(g1, g2, VK, SE, q=0.1,
+                                             tol=1e-12, precond="kron")
+        np.testing.assert_allclose(np.asarray(vj), np.asarray(vk),
+                                   rtol=1e-6)
+        for a, b in zip(jtu.tree_leaves(gj), jtu.tree_leaves(gk)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-7)
+
+
 # -- the cost contract: exactly two PCG solves -----------------------------
 
 def _count_pcg_solves(jaxpr, acc=0):
@@ -167,6 +212,24 @@ def test_exactly_two_pcg_solves_in_grad_jaxpr(make):
     fn, theta = make()
     jaxpr = jax.make_jaxpr(jax.grad(lambda t: fn(t).sum()))(theta)
     assert _count_pcg_solves(jaxpr.jaxpr) == 2
+
+
+def test_exactly_two_pcg_solves_with_kron_precond():
+    """The §9 preconditioner must not add solves: the gradient jaxpr
+    still contains exactly two while-loop PCG solves (the M^{-1}
+    applications live INSIDE the loop bodies)."""
+    g1, g2 = _sparse_batches()
+    p1 = row_panel_packs_for_batch(g1, edge_kernel=SE)
+    p2 = row_panel_packs_for_batch(g2, edge_kernel=SE)
+    for spec in (dict(method="lowrank"),
+                 dict(method="sparse", packs1=p1, packs2=p2,
+                      sparse_mode="mxu")):
+        gd, gs = _dense_batches() if spec["method"] == "lowrank" \
+            else (g1, g2)
+        fn = mgk_value_fn(gd, gs, VK, SE, precond="kron", **spec)
+        theta = kernel_theta(VK, SE, q=0.1)
+        jaxpr = jax.make_jaxpr(jax.grad(lambda t: fn(t).sum()))(theta)
+        assert _count_pcg_solves(jaxpr.jaxpr) == 2
 
 
 def test_value_matches_nondifferentiable_path():

@@ -26,6 +26,7 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     from . import xmv_bench
     from . import pcg_bench
+    from . import faults_bench
     if args.smoke:
         from . import primitives
         primitives.run(sizes=(32,))
@@ -36,6 +37,8 @@ def main(argv=None) -> None:
         # iteration-count asserts are deterministic; the wall-clock
         # asserts need a stable median on a contended CI runner)
         pcg_bench.run(iters=5)
+        # PR 6: fault campaign (bitwise identity + guard overhead)
+        faults_bench.run(n_graphs=6, B=2, iters=3)
         return
     from . import primitives, reorder_bench, adaptive, incremental, \
         packages, roofline
@@ -43,6 +46,7 @@ def main(argv=None) -> None:
     xmv_bench.run()           # PR 1: batched-grid + fused + pipelined CG
     xmv_bench.run_gram()      # PR 4: Gram-tile kernel + segmented PCG
     pcg_bench.run()           # PR 5: Kronecker preconditioner + bf16
+    faults_bench.run()        # PR 6: self-healing build + guard cost
     reorder_bench.run()       # paper Figs. 6-7
     adaptive.run()            # paper Fig. 8
     incremental.run()         # paper Fig. 9

@@ -29,7 +29,8 @@ import jax.numpy as jnp
 
 from .base_kernels import BaseKernel, Constant
 from .graph import GraphBatch
-from .pcg import PCGResult, pcg_solve, pcg_solve_segmented
+from .pcg import GuardSpec, MatvecFault, PCGResult, pcg_solve, \
+    pcg_solve_segmented
 from .xmv import xmv_elementwise, xmv_full, xmv_lowrank_precomputed, \
     weighted_operands
 
@@ -56,6 +57,10 @@ class MGKResult(NamedTuple):
     # scalar: total pair-matvec evaluations of the solve (PCGResult
     # passthrough) — the segmented-vs-lockstep work metric (DESIGN.md §8)
     matvec_pairs: jnp.ndarray | None = None
+    # [B] int32 PCG_* status bitmask (PCGResult passthrough, DESIGN.md
+    # §10): 0 clean, MAX_ITER slow-but-sane, any cause flag = guard
+    # intervened — the Gram driver's degradation-ladder signal
+    status: jnp.ndarray | None = None
 
 
 def _outer_flat(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
@@ -191,7 +196,7 @@ def _make_precond_apply(precond: str, g1: GraphBatch, g2: GraphBatch,
                         shape: tuple[int, int, int],
                         gram_tile: tuple[int, int] | None = None,
                         factors1=None, factors2=None,
-                        kron_rank: int = 2):
+                        kron_rank: int = 2, spd_margin=None):
     """The ``M^{-1}`` application for the PCG solve, shared by every
     entry point and the adjoint path (DESIGN.md §9):
 
@@ -205,6 +210,10 @@ def _make_precond_apply(precond: str, g1: GraphBatch, g2: GraphBatch,
       whole solve. Under ``gram_tile=(Bi, Bj)`` the factors are
       PER-AXIS (row graphs / column graphs), sliced from the row-major
       pair-flattened batches exactly like the per-axis packs.
+
+    ``spd_margin`` (possibly traced) overrides the §9.2 SPD-certificate
+    margin; negative values are the certificate-failure injection seam
+    (core/precond.py:kron_scalars, DESIGN.md §10).
     """
     if precond == "jacobi":
         return None
@@ -218,9 +227,9 @@ def _make_precond_apply(precond: str, g1: GraphBatch, g2: GraphBatch,
         Bi, Bj = gram_tile
         return kron_apply_gram(factors1, factors2, vertex_kernel,
                                edge_kernel, (Bi, Bj, n, m),
-                               rank=kron_rank)
+                               rank=kron_rank, spd_margin=spd_margin)
     return kron_apply(factors1, factors2, vertex_kernel, edge_kernel,
-                      (B, n, m), rank=kron_rank)
+                      (B, n, m), rank=kron_rank, spd_margin=spd_margin)
 
 
 def _make_sparse_matvec(sys_: ProductSystem, packs1, packs2,
@@ -309,7 +318,8 @@ def _make_sparse_matvec(sys_: ProductSystem, packs1, packs2,
     jax.jit,
     static_argnames=("vertex_kernel", "edge_kernel", "method", "chunk",
                      "max_iter", "return_nodal", "fixed_iters",
-                     "pcg_variant", "precond", "kron_rank"))
+                     "pcg_variant", "precond", "kron_rank", "guard",
+                     "fault"))
 def mgk_pairs(
     g1: GraphBatch,
     g2: GraphBatch,
@@ -325,13 +335,22 @@ def mgk_pairs(
     pcg_variant: str = "classic",
     precond: str = "jacobi",
     kron_rank: int = 2,
+    guard: GuardSpec | bool | None = True,
+    fault: MatvecFault | None = None,
+    spd_margin=None,
 ) -> MGKResult:
     """Marginalized graph kernel between aligned pairs of two batches.
 
     ``precond``: "jacobi" (paper Alg. 1 line 2) or "kron" — the
     Kronecker-factored approximate inverse of ``core/precond.py``
     (rank ``kron_rank`` ∈ {1, 2}), which cuts PCG iteration counts at
-    identical solutions (DESIGN.md §9)."""
+    identical solutions (DESIGN.md §9).
+
+    ``guard``/``fault``/``spd_margin``: PCG numerical guards, the
+    matvec fault-injection seam, and the (possibly traced) SPD-margin
+    override — see core/pcg.py and DESIGN.md §10. All three reach the
+    solve as jit ARGUMENTS (guard/fault static, spd_margin traced), so
+    arming them retraces instead of fighting cached traces."""
     sys_ = build_product_system(g1, g2, vertex_kernel)
     B, n = g1.adjacency.shape[0], g1.adjacency.shape[1]
     m = g2.adjacency.shape[1]
@@ -340,16 +359,18 @@ def mgk_pairs(
     diag = sys_.dx / sys_.vx         # paper Alg. 1 line 2
     papply = _make_precond_apply(precond, g1, g2, vertex_kernel,
                                  edge_kernel, (B, n, m),
-                                 kron_rank=kron_rank)
+                                 kron_rank=kron_rank,
+                                 spd_margin=spd_margin)
     sol: PCGResult = pcg_solve(matvec, rhs, diag, tol=tol,
                                max_iter=max_iter, fixed_iters=fixed_iters,
                                variant=pcg_variant,
-                               precond_apply=papply)
+                               precond_apply=papply, guard=guard,
+                               fault=fault)
     values = jnp.sum(sys_.px * sol.x, axis=-1)
     nodal = sol.x.reshape(B, n, m) if return_nodal else None
     return MGKResult(values=values, iterations=sol.iterations,
                      converged=sol.converged, nodal=nodal,
-                     matvec_pairs=sol.matvec_pairs)
+                     matvec_pairs=sol.matvec_pairs, status=sol.status)
 
 
 def mgk_single(g1: GraphBatch, g2: GraphBatch, **kw) -> MGKResult:
@@ -421,7 +442,10 @@ def mgk_adaptive(g1: GraphBatch, g2: GraphBatch,
                  fixed_iters: int | None = None,
                  pcg_variant: str = "classic",
                  precond: str = "jacobi",
-                 kron_rank: int = 2) -> MGKResult:
+                 kron_rank: int = 2,
+                 guard: GuardSpec | bool | None = True,
+                 fault: MatvecFault | None = None,
+                 spd_margin=None) -> MGKResult:
     """The paper's adaptive primitive switch (Sec. IV-B), lifted to the
     bucket level: pick the XMV backend per pair-batch from the octile
     density statistic AND the edge kernel's feature expansion — the
@@ -432,7 +456,8 @@ def mgk_adaptive(g1: GraphBatch, g2: GraphBatch,
                                  tile=tile)
     kw = dict(tol=tol, max_iter=max_iter, fixed_iters=fixed_iters,
               pcg_variant=pcg_variant, precond=precond,
-              kron_rank=kron_rank)
+              kron_rank=kron_rank, guard=guard, fault=fault,
+              spd_margin=spd_margin)
     if route.startswith("sparse"):
         from repro.kernels.ops import row_panel_packs_for_batch
         ek_pack = edge_kernel if route == "sparse_mxu" else None
@@ -451,7 +476,8 @@ def mgk_adaptive(g1: GraphBatch, g2: GraphBatch,
     jax.jit,
     static_argnames=("vertex_kernel", "edge_kernel", "max_iter",
                      "return_nodal", "fixed_iters", "pcg_variant",
-                     "sparse_mode", "gram_tile", "precond", "kron_rank"))
+                     "sparse_mode", "gram_tile", "precond", "kron_rank",
+                     "guard", "fault"))
 def mgk_pairs_sparse(
     g1: GraphBatch,
     g2: GraphBatch,
@@ -471,6 +497,9 @@ def mgk_pairs_sparse(
     kron_rank: int = 2,
     factors1=None,               # optional cached KronFactors (per-pair
     factors2=None,               # stacked, or PER-AXIS under gram_tile)
+    guard: GuardSpec | bool | None = True,
+    fault: MatvecFault | None = None,
+    spd_margin=None,
 ) -> MGKResult:
     """Block-sparse-octile variant of mgk_pairs (paper Sec. IV).
 
@@ -508,17 +537,18 @@ def mgk_pairs_sparse(
     papply = _make_precond_apply(precond, g1, g2, vertex_kernel,
                                  edge_kernel, (B, n, m),
                                  gram_tile=gram_tile, factors1=factors1,
-                                 factors2=factors2, kron_rank=kron_rank)
+                                 factors2=factors2, kron_rank=kron_rank,
+                                 spd_margin=spd_margin)
 
     rhs = sys_.dx * sys_.qx
     sol = pcg_solve(matvec, rhs, diag, tol=tol, max_iter=max_iter,
                     fixed_iters=fixed_iters, variant=pcg_variant,
-                    precond_apply=papply)
+                    precond_apply=papply, guard=guard, fault=fault)
     values = jnp.sum(sys_.px * sol.x, axis=-1)
     nodal = sol.x.reshape(B, n, m) if return_nodal else None
     return MGKResult(values=values, iterations=sol.iterations,
                      converged=sol.converged, nodal=nodal,
-                     matvec_pairs=sol.matvec_pairs)
+                     matvec_pairs=sol.matvec_pairs, status=sol.status)
 
 
 def mgk_pairs_sparse_segmented(
@@ -541,6 +571,9 @@ def mgk_pairs_sparse_segmented(
     kron_rank: int = 2,
     factors1=None,
     factors2=None,
+    guard: GuardSpec | bool | None = True,
+    fault: MatvecFault | None = None,
+    spd_margin=None,
 ) -> MGKResult:
     """:func:`mgk_pairs_sparse` solved with convergence-segmented PCG
     (``core/pcg.py:pcg_solve_segmented``, DESIGN.md §8): the solve runs
@@ -582,7 +615,8 @@ def mgk_pairs_sparse_segmented(
     papply = _make_precond_apply(precond, g1, g2, vertex_kernel,
                                  edge_kernel, (B, n, m),
                                  gram_tile=gram_tile, factors1=factors1,
-                                 factors2=factors2, kron_rank=kron_rank)
+                                 factors2=factors2, kron_rank=kron_rank,
+                                 spd_margin=spd_margin)
 
     def select(lanes):
         import numpy as np
@@ -613,7 +647,8 @@ def mgk_pairs_sparse_segmented(
         sub_apply = kron_apply(take_kron_factors(factors1, i1),
                                take_kron_factors(factors2, i2),
                                vertex_kernel, edge_kernel,
-                               (len(lanes), n, m), rank=kron_rank)
+                               (len(lanes), n, m), rank=kron_rank,
+                               spd_margin=spd_margin)
         return sub_mv, sub_apply
 
     rhs = sys_.dx * sys_.qx
@@ -622,9 +657,10 @@ def mgk_pairs_sparse_segmented(
                               segment_size=segment_size,
                               variant=pcg_variant, select=select,
                               pad_multiple=pad_multiple,
-                              precond_apply=papply)
+                              precond_apply=papply, guard=guard,
+                              fault=fault)
     values = jnp.sum(sys_.px * sol.x, axis=-1)
     nodal = sol.x.reshape(B, n, m) if return_nodal else None
     return MGKResult(values=values, iterations=sol.iterations,
                      converged=sol.converged, nodal=nodal,
-                     matvec_pairs=sol.matvec_pairs)
+                     matvec_pairs=sol.matvec_pairs, status=sol.status)

@@ -51,6 +51,43 @@ solvers: classic already computes ``rho = (r, z)`` and pipelined
 extra reduction (it previously burned one on ``(r, r)``) and cannot
 drift between recurrences or between ``precond=`` choices.
 
+Numerical guards (``guard=``, DESIGN.md §10). At Gram-build scale
+(~5·10⁹ pair solves) ill-conditioned systems, a failed preconditioner
+SPD certificate, and transient data corruption are certainties, and an
+unguarded lockstep batch silently turns one poisoned pair into NaN Gram
+entries. With a :class:`GuardSpec` (the default) every iteration
+additionally watches, PER PAIR, the scalars it already computes:
+
+* **non-finite** — NaN/Inf in the reduction scalars ((p, Ap) and
+  (r, z) for classic; (r, u) and (w, u) for pipelined), which any
+  NaN/Inf anywhere in the matvec output or iterates reaches within one
+  reduction;
+* **breakdown** — a non-positive curvature (p, Ap) <= 0 or negative
+  preconditioned residual (r, M^{-1} r) < 0: the operator or the
+  M^{-1} application is not SPD along the current direction (the §9.2
+  certificate failed, or rounding destroyed conjugacy);
+* **divergence** — the criterion quantity exceeds
+  ``divergence_factor`` times its running minimum;
+* **stagnation** — no new running minimum for ``stagnation_window``
+  consecutive iterations (pipelined recurrence drift: the recurred
+  s = A p leaves the true residual — the classic failure mode of
+  pipelined CG the residual-replacement literature addresses).
+
+A flagged pair gets a bounded RESTART with residual replacement: the
+true residual ``r = b - A x`` is recomputed from the (finite part of
+the) current iterate, the direction set is rebuilt from ``M^{-1} r``,
+and the pair continues (status gains ``PCG_RESTARTED`` plus the cause
+flag). The recovery matvec runs under a batch-wide ``lax.cond``, so the
+clean hot path pays only a handful of [B]-scalar comparisons per
+iteration (<5% — measured by ``benchmarks/faults_bench.py``). After
+``max_restarts`` the pair is frozen DEAD: it stops iterating (and, in
+the segmented solver, retires from the matvec batch), keeps its cause
+flags, and surfaces through ``PCGResult.status`` for the driver's
+degradation ladder to escalate or quarantine — never a silent NaN.
+``fault=`` (a :class:`MatvecFault`) is the deterministic corruption
+seam the fault-injection harness (distributed/faults.py) uses to test
+exactly this machinery; it compiles away when None.
+
 Differentiability: the dynamic ``while_loop`` body is NOT reverse-mode
 differentiable, and unrolling the iteration for autodiff would store
 every iterate. Gradients of solutions therefore go through the implicit
@@ -71,19 +108,107 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["PCGResult", "pcg_solve", "pcg_solve_segmented",
-           "adjoint_solve"]
+           "adjoint_solve", "GuardSpec", "MatvecFault",
+           "PCG_OK", "PCG_MAX_ITER", "PCG_BREAKDOWN", "PCG_NONFINITE",
+           "PCG_STAGNATION", "PCG_DIVERGENCE", "PCG_RESTARTED",
+           "status_names"]
 
 
-class PCGResult(NamedTuple):
-    x: jnp.ndarray           # [B, N] solution
-    iterations: jnp.ndarray  # [B] int32 iterations to convergence
-    residual: jnp.ndarray    # [B] final (r, M^{-1} r) — the criterion
-    converged: jnp.ndarray   # [B] bool
-    # scalar int32: total pair-matvec evaluations the solve performed
-    # (lockstep: B per iteration run; segmented: live pairs only). The
-    # Gram driver feeds this — with the per-pair ``iterations`` — back
-    # into bucket/cost planning (distributed/scheduler.py).
-    matvec_pairs: jnp.ndarray | None = None
+# -- per-pair status flags (DESIGN.md §10) -----------------------------------
+#
+# A bitmask, not an enum: one pair can legitimately carry several flags
+# (e.g. RESTARTED|NONFINITE for a transient matvec NaN the restart
+# recovered from, with converged=True). MAX_ITER is set by _result only
+# when no failure cause is recorded — a dead pair reports its cause, a
+# merely-slow pair reports MAX_ITER, and the two stay distinguishable
+# all the way up through MGKResult into the Gram driver's manifest.
+PCG_OK = 0            # converged, no anomaly observed
+PCG_MAX_ITER = 1      # hit the iteration cap without converging
+PCG_BREAKDOWN = 2     # non-SPD curvature: (p, Ap) <= 0 or (r, M⁻¹r) < 0
+PCG_NONFINITE = 4     # NaN/Inf reached the reduction scalars
+PCG_STAGNATION = 8    # no residual improvement for a whole window
+PCG_DIVERGENCE = 16   # residual blew past divergence_factor × best
+PCG_RESTARTED = 32    # at least one residual-replacement restart ran
+
+_PCG_CAUSES = (PCG_BREAKDOWN | PCG_NONFINITE | PCG_STAGNATION
+               | PCG_DIVERGENCE)
+_STATUS_NAMES = ((PCG_MAX_ITER, "max_iter"), (PCG_BREAKDOWN, "breakdown"),
+                 (PCG_NONFINITE, "nonfinite"),
+                 (PCG_STAGNATION, "stagnation"),
+                 (PCG_DIVERGENCE, "divergence"),
+                 (PCG_RESTARTED, "restarted"))
+
+
+def status_names(status: int) -> list[str]:
+    """Human-readable flag names of one status word (["ok"] for 0)."""
+    s = int(status)
+    names = [name for bit, name in _STATUS_NAMES if s & bit]
+    return names or ["ok"]
+
+
+class GuardSpec(NamedTuple):
+    """Static guard configuration (hashable — rides jit static args).
+
+    max_restarts: residual-replacement restarts per pair before it is
+      frozen dead; each restart costs one recovery matvec (two for the
+      pipelined variant, which also rebuilds w = A u).
+    stagnation_window: consecutive iterations without a new running
+      minimum of the convergence criterion before a restart is forced.
+      Healthy solves on this codebase converge in tens of iterations,
+      so the default never fires on them.
+    divergence_factor: restart when the criterion exceeds this multiple
+      of its running minimum.
+    """
+    max_restarts: int = 2
+    stagnation_window: int = 64
+    divergence_factor: float = 1e4
+
+
+class MatvecFault(NamedTuple):
+    """Deterministic matvec-output corruption — the solver's
+    fault-injection seam (distributed/faults.py, DESIGN.md §10).
+
+    Applied INSIDE the machine bodies to the matvec result, so the
+    guards face exactly what a corrupted kernel output would look like.
+    ``pairs`` are batch-lane indices; the fault fires while a lane's
+    own iteration counter is in ``[start, stop)`` (``stop=None`` =
+    persistent). Being a NamedTuple of hashables it rides jit static
+    args, so arming/disarming a fault retraces instead of silently
+    reusing a clean cached trace.
+
+    Under :func:`pcg_solve_segmented`, lane indices refer to the
+    CURRENT (possibly compacted) batch — faults meant for specific
+    pairs should finish (``stop``) within the first segment, before any
+    retirement remap.
+    """
+    pairs: tuple[int, ...]
+    start: int = 0
+    stop: int | None = 1
+    value: float = float("nan")
+
+    def apply(self, y: jnp.ndarray, iters: jnp.ndarray) -> jnp.ndarray:
+        idx = jnp.asarray(self.pairs, dtype=jnp.int32)
+        lane = jnp.zeros((y.shape[0],), bool).at[idx].set(
+            True, mode="drop")
+        hit = iters >= self.start
+        if self.stop is not None:
+            hit = jnp.logical_and(hit, iters < self.stop)
+        bad = jnp.logical_and(lane, hit)
+        return jnp.where(bad[:, None], jnp.full_like(y, self.value), y)
+
+
+def _apply_fault(fault, y, iters):
+    return y if fault is None else fault.apply(y, iters)
+
+
+def _resolve_guard(guard) -> GuardSpec | None:
+    if guard is None or guard is False:
+        return None
+    if guard is True:
+        return GuardSpec()
+    if isinstance(guard, GuardSpec):
+        return guard
+    raise TypeError(f"guard must be bool/None/GuardSpec, got {guard!r}")
 
 
 def _guard(x):
@@ -118,31 +243,132 @@ def _wrap_apply(precond_apply):
 # both machines already compute (classic: rho; pipelined: gamma), so
 # the criterion is the IDENTICAL quantity in every variant under every
 # preconditioner — the tolerance-semantics contract of DESIGN.md §9.
+#
+# Under a GuardSpec the state grows the guard fields (b, status,
+# restarts, best, stall, dead) and each body runs _guard_step after its
+# recurrence: detection on the scalars the iteration already computed,
+# restart under a batch-wide lax.cond. A clean iteration's TRAJECTORY is
+# bit-identical with guards on or off — the guards only observe until
+# something trips.
 
 def _precond_thresh(rho0, tol):
     eps = jnp.asarray(1e-30, rho0.dtype)
     return (tol * tol) * jnp.maximum(rho0, eps)
 
 
-def _classic_init(matvec, apply_mz, b, diag_precond, tol):
-    del matvec  # classic needs no setup matvec
+def _halt(st):
+    """Pairs that must stop iterating: converged, or frozen dead by the
+    guard after exhausting restarts."""
+    dead = st.get("dead")
+    return st["conv"] if dead is None else jnp.logical_or(st["conv"],
+                                                          dead)
+
+
+def _guard_init(st, b, guard):
+    if guard is None:
+        return st
+    B = b.shape[0]
+    st.update(
+        b=b,                                    # RHS, kept for r = b - Ax
+        status=jnp.zeros(B, jnp.int32),
+        restarts=jnp.zeros(B, jnp.int32),
+        best=st["res"],                         # running criterion min
+        stall=jnp.zeros(B, jnp.int32),          # iters since last min
+        dead=jnp.zeros(B, bool))
+    return st
+
+
+def _guard_step(matvec, apply_mz, fault, guard, st, nxt, active,
+                nonfinite, breakdown, make_repl, make_zeros):
+    """Shared guard pass run after a machine body (DESIGN.md §10).
+
+    ``nxt`` is the body's freshly-computed state, ``active`` the mask it
+    iterated under, ``nonfinite``/``breakdown`` the [B] detection bits
+    from the body's own reduction scalars. ``make_repl(x_safe)`` builds
+    the variant's residual-replacement state (one or two recovery
+    matvecs — only traced into the taken branch of a batch-wide
+    lax.cond); ``make_zeros()`` its zero-cost skip-branch twin."""
+    res_new, thresh = nxt["res"], nxt["thresh"]
+    nonfinite = jnp.logical_and(active, nonfinite)
+    breakdown = jnp.logical_and(active,
+                                jnp.logical_and(breakdown, ~nonfinite))
+    best, stall = st["best"], st["stall"]
+    diverged = jnp.logical_and(
+        active, res_new > guard.divergence_factor * best)
+    improved = res_new < best
+    stall = jnp.where(jnp.logical_and(active, ~improved), stall + 1,
+                      jnp.zeros_like(stall))
+    stagnated = jnp.logical_and(active, stall >= guard.stagnation_window)
+    best = jnp.where(jnp.logical_and(active, improved), res_new, best)
+
+    trigger = nonfinite | breakdown | diverged | stagnated
+    can = st["restarts"] < guard.max_restarts
+    do_restart = jnp.logical_and(trigger, can)
+    new_dead = jnp.logical_and(trigger, ~can)
+    flag = functools.partial(jnp.where, size=None) if False else None
+    del flag
+    z32 = jnp.int32(0)
+    status = (st["status"]
+              | jnp.where(nonfinite, jnp.int32(PCG_NONFINITE), z32)
+              | jnp.where(breakdown, jnp.int32(PCG_BREAKDOWN), z32)
+              | jnp.where(diverged, jnp.int32(PCG_DIVERGENCE), z32)
+              | jnp.where(stagnated, jnp.int32(PCG_STAGNATION), z32)
+              | jnp.where(do_restart, jnp.int32(PCG_RESTARTED), z32))
+
+    def _replace(_):
+        x = nxt["x"]
+        x_ok = jnp.all(jnp.isfinite(x), axis=-1)
+        x_safe = jnp.where(x_ok[:, None], x, jnp.zeros_like(x))
+        return make_repl(x_safe)
+
+    repl = jax.lax.cond(jnp.any(do_restart), _replace,
+                        lambda _: make_zeros(), None)
+    out = dict(nxt)
+    sel = do_restart
+    for k, v in repl.items():
+        if k == "conv_now":
+            continue
+        m = sel[:, None] if v.ndim == 2 else sel
+        out[k] = jnp.where(m, v, out[k])
+    # residual replacement can reveal true convergence on the spot
+    out["conv"] = jnp.logical_or(out["conv"],
+                                 jnp.logical_and(sel, repl["conv_now"]))
+    dead = jnp.logical_or(st["dead"], new_dead)
+    # pipelined scalars feed UNMASKED vector updates next iteration —
+    # a dead pair must never leave a NaN alpha/beta behind
+    for k in ("alpha", "beta"):
+        if k in out:
+            out[k] = jnp.where(dead, jnp.zeros_like(out[k]), out[k])
+    out.update(
+        b=st["b"], dead=dead, status=status,
+        restarts=st["restarts"] + sel.astype(jnp.int32),
+        best=jnp.where(sel, repl["res"], best),
+        stall=jnp.where(sel, jnp.zeros_like(stall), stall))
+    return out
+
+
+def _classic_init(matvec, apply_mz, b, diag_precond, tol, guard=None,
+                  fault=None):
+    del matvec, fault  # classic needs no setup matvec
     r0 = b
     z0 = apply_mz(diag_precond, r0)
     rho0 = jnp.sum(r0 * z0, axis=-1)       # (b, M^{-1} b)
     thresh = _precond_thresh(rho0, tol)
-    return dict(
+    st = dict(
         x=jnp.zeros_like(b), r=r0, p=z0,
         rho=rho0,
         conv=rho0 <= thresh, res=rho0,
         iters=jnp.zeros(b.shape[0], jnp.int32),
         diag=diag_precond, thresh=thresh)
+    return _guard_init(st, b, guard)
 
 
-def _classic_body(matvec, apply_mz, st):
+def _classic_body(matvec, apply_mz, st, guard=None, fault=None):
     x, r, p, rho = st["x"], st["r"], st["p"], st["rho"]
     conv, res, thresh = st["conv"], st["res"], st["thresh"]
-    active = ~conv
+    active = ~_halt(st)
     a = matvec(p)                                       # [B, N]
+    a = _apply_fault(fault, a, st["iters"])
     pa = jnp.sum(p * a, axis=-1)
     alpha = jnp.where(active, rho / _guard(pa), 0.0)
     x = x + alpha[:, None] * p
@@ -153,24 +379,48 @@ def _classic_body(matvec, apply_mz, st):
     p = jnp.where(active[:, None], z + beta[:, None] * p, p)
     res_new = jnp.where(active, rho_new, res)
     conv = jnp.logical_or(conv, res_new <= thresh)
-    return dict(
+    iters = st["iters"] + active.astype(jnp.int32)
+    nxt = dict(
         x=x, r=r, p=p, rho=jnp.where(active, rho_new, rho),
-        conv=conv, res=res_new,
-        iters=st["iters"] + active.astype(jnp.int32),
+        conv=conv, res=res_new, iters=iters,
         diag=st["diag"], thresh=thresh)
+    if guard is None:
+        return nxt
+
+    def make_repl(x_safe):
+        ax = _apply_fault(fault, matvec(x_safe), iters)
+        r_r = st["b"] - ax
+        z_r = apply_mz(st["diag"], r_r)
+        rho_r = jnp.sum(r_r * z_r, axis=-1)
+        return dict(x=x_safe, r=r_r, p=z_r, rho=rho_r, res=rho_r,
+                    conv_now=rho_r <= thresh)
+
+    def make_zeros():
+        zv = jnp.zeros_like(x)
+        zs = jnp.zeros_like(rho)
+        return dict(x=zv, r=zv, p=zv, rho=zs, res=zs,
+                    conv_now=jnp.zeros(zs.shape, bool))
+
+    return _guard_step(
+        matvec, apply_mz, fault, guard, st, nxt, active,
+        nonfinite=~jnp.isfinite(pa) | ~jnp.isfinite(rho_new),
+        breakdown=(pa <= 0) | (rho_new < 0),
+        make_repl=make_repl, make_zeros=make_zeros)
 
 
-def _pipelined_init(matvec, apply_mz, b, diag_precond, tol):
+def _pipelined_init(matvec, apply_mz, b, diag_precond, tol, guard=None,
+                    fault=None):
     """Chronopoulos–Gear setup: ONE matvec (w0 = A u0)."""
     r0 = b
     u0 = apply_mz(diag_precond, r0)
-    w0 = matvec(u0)
+    w0 = _apply_fault(fault, matvec(u0),
+                      jnp.zeros(b.shape[0], jnp.int32))
     gamma0 = jnp.sum(r0 * u0, axis=-1)     # (b, M^{-1} b)
     delta0 = jnp.sum(w0 * u0, axis=-1)
     thresh = _precond_thresh(gamma0, tol)
     conv0 = gamma0 <= thresh
     zeros = jnp.zeros_like(b)
-    return dict(
+    st = dict(
         x=jnp.zeros_like(b), r=r0, u=u0, w=w0, p=zeros, s=zeros,
         gamma=gamma0,
         alpha=jnp.where(conv0, 0.0, gamma0 / _guard(delta0)),
@@ -178,9 +428,10 @@ def _pipelined_init(matvec, apply_mz, b, diag_precond, tol):
         conv=conv0, res=gamma0,
         iters=jnp.zeros(b.shape[0], jnp.int32),
         diag=diag_precond, thresh=thresh)
+    return _guard_init(st, b, guard)
 
 
-def _pipelined_body(matvec, apply_mz, st):
+def _pipelined_body(matvec, apply_mz, st, guard=None, fault=None):
     """Single-reduction (Chronopoulos–Gear) pipelined PCG iteration.
 
     Per iteration — ONE matvec, ONE fused reduction round:
@@ -203,7 +454,8 @@ def _pipelined_body(matvec, apply_mz, st):
     p, s = st["p"], st["s"]
     gamma, alpha, beta = st["gamma"], st["alpha"], st["beta"]
     conv, res, thresh = st["conv"], st["res"], st["thresh"]
-    active = ~conv
+    halted = _halt(st)
+    active = ~halted
     am = active[:, None]
     # -- vector updates from the PREVIOUS round's scalars -----------
     p = jnp.where(am, u + beta[:, None] * p, p)
@@ -211,24 +463,59 @@ def _pipelined_body(matvec, apply_mz, st):
     x = x + alpha[:, None] * p
     r = r - alpha[:, None] * s
     u = jnp.where(am, apply_mz(st["diag"], r), u)
-    w = jnp.where(am, matvec(u), w)               # single matvec
+    mv = _apply_fault(fault, matvec(u), st["iters"])
+    w = jnp.where(am, mv, w)                      # single matvec
     # -- the single fused reduction round ---------------------------
     gamma_new = jnp.sum(r * u, axis=-1)
     delta = jnp.sum(w * u, axis=-1)
     res_new = jnp.where(active, gamma_new, res)
     conv = jnp.logical_or(conv, res_new <= thresh)
-    still = ~conv
+    still = ~conv if guard is None else \
+        ~jnp.logical_or(conv, st["dead"])
     beta = jnp.where(still, gamma_new / _guard(gamma), 0.0)
     alpha = jnp.where(
         still,
         gamma_new / _guard(delta - beta * gamma_new / _guard(alpha)),
         0.0)
-    return dict(
+    iters = st["iters"] + active.astype(jnp.int32)
+    nxt = dict(
         x=x, r=r, u=u, w=w, p=p, s=s,
         gamma=jnp.where(still, gamma_new, gamma), alpha=alpha, beta=beta,
-        conv=conv, res=res_new,
-        iters=st["iters"] + active.astype(jnp.int32),
+        conv=conv, res=res_new, iters=iters,
         diag=st["diag"], thresh=thresh)
+    if guard is None:
+        return nxt
+
+    def make_repl(x_safe):
+        # full Chronopoulos–Gear re-init from the replaced residual —
+        # TWO recovery matvecs (r = b - A x, then w = A u)
+        ax = _apply_fault(fault, matvec(x_safe), iters)
+        r_r = st["b"] - ax
+        u_r = apply_mz(st["diag"], r_r)
+        w_r = _apply_fault(fault, matvec(u_r), iters)
+        gamma_r = jnp.sum(r_r * u_r, axis=-1)
+        delta_r = jnp.sum(w_r * u_r, axis=-1)
+        conv_now = gamma_r <= thresh
+        zeros = jnp.zeros_like(x_safe)
+        return dict(
+            x=x_safe, r=r_r, u=u_r, w=w_r, p=zeros, s=zeros,
+            gamma=gamma_r,
+            alpha=jnp.where(conv_now, 0.0, gamma_r / _guard(delta_r)),
+            beta=jnp.zeros_like(gamma_r),
+            res=gamma_r, conv_now=conv_now)
+
+    def make_zeros():
+        zv = jnp.zeros_like(x)
+        zs = jnp.zeros_like(gamma)
+        return dict(x=zv, r=zv, u=zv, w=zv, p=zv, s=zv, gamma=zs,
+                    alpha=zs, beta=zs, res=zs,
+                    conv_now=jnp.zeros(zs.shape, bool))
+
+    return _guard_step(
+        matvec, apply_mz, fault, guard, st, nxt, active,
+        nonfinite=~jnp.isfinite(gamma_new) | ~jnp.isfinite(delta),
+        breakdown=(gamma_new < 0) | (delta <= 0),
+        make_repl=make_repl, make_zeros=make_zeros)
 
 
 _MACHINES = {"classic": (_classic_init, _classic_body),
@@ -243,10 +530,38 @@ def _machine(variant: str):
         raise ValueError(f"unknown PCG variant {variant!r}") from None
 
 
+class PCGResult(NamedTuple):
+    x: jnp.ndarray           # [B, N] solution
+    iterations: jnp.ndarray  # [B] int32 iterations to convergence
+    residual: jnp.ndarray    # [B] final (r, M^{-1} r) — the criterion
+    converged: jnp.ndarray   # [B] bool
+    # scalar int32: total pair-matvec evaluations the solve performed
+    # (lockstep: B per iteration run; segmented: live pairs only). The
+    # Gram driver feeds this — with the per-pair ``iterations`` — back
+    # into bucket/cost planning (distributed/scheduler.py).
+    matvec_pairs: jnp.ndarray | None = None
+    # [B] int32 PCG_* status bitmask (DESIGN.md §10). 0 = clean
+    # convergence; MAX_ITER = slow but sane; any cause flag
+    # (BREAKDOWN/NONFINITE/STAGNATION/DIVERGENCE) = the guard froze or
+    # restarted the pair — the driver's degradation-ladder signal.
+    status: jnp.ndarray | None = None
+
+
 def _result(st, matvec_pairs=None) -> PCGResult:
+    conv = st["conv"]
+    if "status" in st:
+        status = st["status"]
+        # MAX_ITER only when no cause flag explains the non-convergence
+        unexplained = jnp.logical_and(~conv,
+                                      (status & _PCG_CAUSES) == 0)
+        status = status | jnp.where(unexplained, jnp.int32(PCG_MAX_ITER),
+                                    jnp.int32(0))
+    else:
+        status = jnp.where(conv, jnp.int32(PCG_OK),
+                           jnp.int32(PCG_MAX_ITER))
     return PCGResult(x=st["x"], iterations=st["iters"],
-                     residual=st["res"], converged=st["conv"],
-                     matvec_pairs=matvec_pairs)
+                     residual=st["res"], converged=conv,
+                     matvec_pairs=matvec_pairs, status=status)
 
 
 def pcg_solve(
@@ -259,6 +574,8 @@ def pcg_solve(
     fixed_iters: int | None = None,
     variant: str = "classic",
     precond_apply: Callable[[jnp.ndarray], jnp.ndarray] | None = None,
+    guard: GuardSpec | bool | None = True,
+    fault: MatvecFault | None = None,
 ) -> PCGResult:
     """Solve ``A x = b`` for a batch of SPD systems (masked lockstep).
 
@@ -289,15 +606,27 @@ def pcg_solve(
         Kronecker-factored approximate inverse of ``core/precond.py``
         plugs in here. Must be SPD; the same closure serves the adjoint
         solve (core/adjoint.py reuses it verbatim).
+      guard: numerical guards + bounded restart (module docstring /
+        DESIGN.md §10). True (default) = :class:`GuardSpec` defaults,
+        False/None = the bare machines (no status tracking beyond
+        MAX_ITER, no detection — the clean-path-overhead baseline of
+        ``benchmarks/faults_bench.py``), or an explicit GuardSpec.
+        Clean trajectories are bit-identical either way.
+      fault: optional :class:`MatvecFault` corruption seam (tests /
+        fault-injection harness only). Compiles away when None.
 
     The result's ``matvec_pairs`` records B x (iterations run + setup
     matvecs) — the lockstep cost that :func:`pcg_solve_segmented` beats
-    by retiring converged pairs at segment boundaries.
+    by retiring converged pairs at segment boundaries. Guard-restart
+    recovery matvecs (rare, cond-gated) are not counted.
     """
     init, body = _machine(variant)
+    gspec = _resolve_guard(guard)
     apply_mz = _wrap_apply(precond_apply)
-    st0 = init(matvec, apply_mz, b, diag_precond, tol)
-    step = functools.partial(body, matvec, apply_mz)
+    st0 = init(matvec, apply_mz, b, diag_precond, tol, guard=gspec,
+               fault=fault)
+    step = functools.partial(body, matvec, apply_mz, guard=gspec,
+                             fault=fault)
     if fixed_iters is not None:
         def scan_body(s, _):
             return step(s), None
@@ -306,7 +635,7 @@ def pcg_solve(
     else:
         def cond(carry):
             s, it = carry
-            return jnp.logical_and(it < max_iter, ~jnp.all(s["conv"]))
+            return jnp.logical_and(it < max_iter, ~jnp.all(_halt(s)))
 
         def wbody(carry):
             s, it = carry
@@ -331,6 +660,8 @@ def pcg_solve_segmented(
                      Callable[[jnp.ndarray], jnp.ndarray]] | None = None,
     pad_multiple: int = 1,
     precond_apply: Callable[[jnp.ndarray], jnp.ndarray] | None = None,
+    guard: GuardSpec | bool | None = True,
+    fault: MatvecFault | None = None,
 ) -> PCGResult:
     """Convergence-segmented PCG with pair retirement (DESIGN.md §8).
 
@@ -366,6 +697,10 @@ def pcg_solve_segmented(
         scattered back). 1 = exact compaction.
       precond_apply: as in :func:`pcg_solve` (the full-batch
         application; compacted sub-batches take theirs from ``select``).
+      guard/fault: as in :func:`pcg_solve`. Pairs the guard freezes
+        DEAD retire from the matvec batch at the next segment boundary
+        exactly like converged pairs — a poisoned pair stops consuming
+        matvecs the moment its restart budget is spent.
 
     This is a HOST-DRIVEN loop (it cannot run under an enclosing jit);
     each segment itself runs as one compiled bounded loop.
@@ -374,8 +709,10 @@ def pcg_solve_segmented(
     if segment_size < 1:
         raise ValueError(f"segment_size must be >= 1, got {segment_size}")
     B = b.shape[0]
+    gspec = _resolve_guard(guard)
     apply_mz = _wrap_apply(precond_apply)
-    full = init(matvec, apply_mz, b, diag_precond, tol)
+    full = init(matvec, apply_mz, b, diag_precond, tol, guard=gspec,
+                fault=fault)
     evals = B * _SETUP_MATVECS[variant]
     live = np.arange(B)           # real live indices (no pad lanes)
     lanes = live                  # live + pad lanes, the gathered batch
@@ -384,11 +721,11 @@ def pcg_solve_segmented(
 
     def run_segment(step_body, state, k):
         # bounded loop: at most k masked iterations, early exit the
-        # moment every LIVE lane converges (mid-segment iterations on a
-        # fully-converged live set would be pure waste)
+        # moment every LIVE lane converges or dies (mid-segment
+        # iterations on a fully-halted live set would be pure waste)
         def cond(carry):
             s, it = carry
-            return jnp.logical_and(it < k, ~jnp.all(s["conv"]))
+            return jnp.logical_and(it < k, ~jnp.all(_halt(s)))
 
         def wbody(carry):
             s, it = carry
@@ -399,11 +736,12 @@ def pcg_solve_segmented(
 
     done = 0
     while done < max_iter and live.size:
-        if bool(np.asarray(st["conv"]).all()):
+        if bool(np.asarray(_halt(st)).all()):
             break
         k = min(segment_size, max_iter - done)
-        st, ran = run_segment(functools.partial(body, mv, apply_mz),
-                              st, k)
+        st, ran = run_segment(
+            functools.partial(body, mv, apply_mz, guard=gspec,
+                              fault=fault), st, k)
         evals += int(lanes.size) * ran
         done += ran
         if ran == 0:
@@ -416,8 +754,8 @@ def pcg_solve_segmented(
                     for f, v in full.items()}
         else:
             full = st
-        conv_live = np.asarray(st["conv"])[:n_real]
-        new_live = live[~conv_live]
+        halt_live = np.asarray(_halt(st))[:n_real]
+        new_live = live[~halt_live]
         if new_live.size == 0:
             break
         if select is None or new_live.size == live.size:
@@ -461,6 +799,6 @@ def adjoint_solve(
     pass on it; DESIGN.md §7) rather than a coincidence at call sites.
 
     Accepts every :func:`pcg_solve` keyword (tol/max_iter/fixed_iters/
-    variant).
+    variant/guard).
     """
     return pcg_solve(matvec, cotangent, diag_precond, **kw)

@@ -157,7 +157,7 @@ def stack_kron_factors(factors: list[KronFactors]) -> KronFactors:
 
 
 def kron_scalars(f1: KronFactors, f2: KronFactors, vertex_kernel,
-                 edge_kernel, spd_margin: float = SPD_MARGIN,
+                 edge_kernel, spd_margin: float | None = None,
                  outer: bool = False):
     """Pair-level mean-field scalars ``(a, b)`` of the §9 expansion:
     ``a = v̄``, ``b = min(v̄² κ̄, spd_margin · a / (σ σ'))``.
@@ -167,15 +167,26 @@ def kron_scalars(f1: KronFactors, f2: KronFactors, vertex_kernel,
     certificate: with ``b σ σ' < a`` every eigenvalue of
     ``a D_x^{-1} + b S ⊗ S'`` is positive (§9.2). ``outer=True``
     broadcasts [Bi] row factors against [Bj] column factors to [Bi, Bj]
-    scalars (Gram-tile execution)."""
+    scalars (Gram-tile execution).
+
+    ``spd_margin`` may be a traced scalar (resolved at trace time, so a
+    margin override reaches already-jitted entry points as an ARGUMENT
+    instead of a module-global monkeypatch that cached traces would
+    ignore). None = the module default. A NEGATIVE margin is the
+    certificate-FAILURE injection seam of the fault harness
+    (distributed/faults.py, DESIGN.md §10): the clamp is bypassed and
+    ``b = |margin| · a / (σ σ')`` is forced outright — ``|margin| >= 1``
+    makes ``M^{-1}`` indefinite, which the PCG guards must catch as a
+    (r, M^{-1} r) < 0 breakdown."""
     vm1, em1, s1 = f1.vmean, f1.emean, f1.sigma
     if outer:
         vm1, em1, s1 = vm1[..., None], em1[..., None], s1[..., None]
     vbar = jnp.maximum(vertex_kernel(vm1, f2.vmean), _VBAR_FLOOR)
     kbar = jnp.maximum(edge_kernel(em1, f2.emean), 0.0)
     a = vbar
-    cap = spd_margin * a / jnp.maximum(s1 * f2.sigma, _SIGMA_FLOOR)
-    b = jnp.minimum(vbar * vbar * kbar, cap)
+    margin = jnp.asarray(SPD_MARGIN if spd_margin is None else spd_margin)
+    cap = jnp.abs(margin) * a / jnp.maximum(s1 * f2.sigma, _SIGMA_FLOOR)
+    b = jnp.where(margin < 0, cap, jnp.minimum(vbar * vbar * kbar, cap))
     return a, b
 
 
@@ -186,7 +197,7 @@ def _check_rank(rank: int) -> None:
 
 def kron_apply(f1: KronFactors, f2: KronFactors, vertex_kernel,
                edge_kernel, shape: tuple[int, int, int], *,
-               rank: int = 2, spd_margin: float = SPD_MARGIN):
+               rank: int = 2, spd_margin: float | None = None):
     """``apply(r) -> M^{-1} r`` over a per-pair batch: ``f1``/``f2`` are
     stacked [B]-leading factors aligned with the pair batch, ``r`` is
     the [B, n*m] residual. rank=1 keeps only the diagonal Kronecker term
@@ -212,7 +223,7 @@ def kron_apply(f1: KronFactors, f2: KronFactors, vertex_kernel,
 
 def kron_apply_gram(f1: KronFactors, f2: KronFactors, vertex_kernel,
                     edge_kernel, shape: tuple[int, int, int, int], *,
-                    rank: int = 2, spd_margin: float = SPD_MARGIN):
+                    rank: int = 2, spd_margin: float | None = None):
     """Gram-tile variant: PER-AXIS factors ([Bi] row graphs / [Bj]
     column graphs, mirroring the per-axis packs of ``stacked_axis``),
     applied to the row-major pair-flattened [Bi*Bj, n*m] residual. Each

@@ -1,13 +1,17 @@
 """Distributed Gram-matrix runtime: cost-model scheduling, chunked
-checkpoint/restart, elastic re-planning, straggler speculation, and the
-sharded pair-solve step (paper Sec. V scaled from one GPU to a pod mesh)."""
+checkpoint/restart, elastic re-planning, straggler speculation, the
+sharded pair-solve step (paper Sec. V scaled from one GPU to a pod
+mesh), and the self-healing layer — degradation ladder, journaled
+manifest, deterministic fault injection (DESIGN.md §10)."""
 from .scheduler import SchedulePlan, make_plan, replan
-from .checkpoint import ChunkStore, save_array_checkpoint, \
-    load_array_checkpoint
+from .checkpoint import ChunkStore, assemble_blocks, \
+    save_array_checkpoint, load_array_checkpoint
 from .gram import GramDriver, gram_pair_step, solve_pair_block
+from .faults import DriverKilled, FaultInjector, FaultPlan, run_campaign
 
 __all__ = [
     "SchedulePlan", "make_plan", "replan", "ChunkStore",
-    "save_array_checkpoint", "load_array_checkpoint", "GramDriver",
-    "gram_pair_step", "solve_pair_block",
+    "assemble_blocks", "save_array_checkpoint", "load_array_checkpoint",
+    "GramDriver", "gram_pair_step", "solve_pair_block",
+    "DriverKilled", "FaultInjector", "FaultPlan", "run_campaign",
 ]

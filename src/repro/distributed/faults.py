@@ -1,0 +1,244 @@
+"""Deterministic fault injection for the Gram pipeline (DESIGN.md §10).
+
+The robustness machinery of this codebase — PCG guards (core/pcg.py),
+the degradation ladder (distributed/gram.py), the journaled ChunkStore
+(distributed/checkpoint.py) — exists for failure modes that are
+certainties at ~5·10⁹ pair solves but essentially unobservable in a
+test-sized run. This module makes them OBSERVABLE AND REPEATABLE: a
+:class:`FaultPlan` is a pure description of a fault campaign, every
+per-block decision is a hash of ``(seed, block_id, salt)`` — NOT of
+visit order — so the exact same blocks fail in the exact same way
+across driver restarts, reruns, and machines. Tests and
+``benchmarks/faults_bench.py`` drive a full Gram build through the
+campaign and assert the end state: bitwise-identical to a fault-free
+build, with every intervention accounted for in the manifest.
+
+Fault classes (the §10.1 failure model, one knob each):
+
+* **driver kill** — :class:`DriverKilled` raised after N completed
+  blocks; the campaign runner restarts the driver against the same
+  store (crash mid-build; exercises journal replay + only-missing
+  recompute).
+* **chunk corruption / truncation** — completed block files are
+  bit-flipped or truncated ON DISK after a successful save (bit rot,
+  torn copy; exercises CRC quarantine-and-recompute on restore).
+* **matvec NaN** — a :class:`~repro.core.pcg.MatvecFault` corrupts the
+  solver's matvec output for chosen pairs during a chosen iteration
+  window, FIRST attempt of a block only (transient kernel fault;
+  exercises the per-pair guards + same-rung retry, which recomputes the
+  block on a clean trajectory — hence bitwise identity survives).
+* **certificate failure** — the kron preconditioner's SPD margin is
+  forced negative (``core/precond.py:kron_scalars``) on the first
+  attempt, making ``M⁻¹`` indefinite (adversarial label distribution;
+  exercises breakdown detection and the kron→jacobi ladder rung for
+  persistent variants).
+
+Faults are injected ONLY through public argument seams (``fault=``,
+``spd_margin=``, bytes on disk) — never by monkeypatching module
+internals, which jit trace-caching would silently ignore.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import zlib
+
+from repro.core.pcg import MatvecFault
+
+__all__ = ["DriverKilled", "FaultPlan", "FaultInjector", "run_campaign"]
+
+
+class DriverKilled(RuntimeError):
+    """Simulated hard crash of the Gram driver (mid-build kill). Raised
+    AFTER a block's save completes — the acutest spot: the store holds
+    the block, the driver never got to act on it."""
+
+
+def _hash01(seed: int, *keys) -> float:
+    """Deterministic uniform [0, 1) from (seed, keys) — crc32 of the
+    repr bytes. Stable across processes/hosts (unlike ``hash``) and
+    independent of visit order (unlike a stateful RNG), which is what
+    lets a restarted driver see the identical fault pattern."""
+    payload = repr((seed,) + keys).encode()
+    return zlib.crc32(payload) / 2**32
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Declarative, seeded fault campaign. All fractions are per-block
+    probabilities evaluated by :func:`_hash01` on (seed, block_id)."""
+    seed: int = 0
+    # raise DriverKilled after this many block saves in one driver run
+    # (None = never). The campaign runner disarms it after it fires, so
+    # one plan = one kill unless the caller re-arms.
+    kill_after_blocks: int | None = None
+    # fraction of completed chunk files to bit-flip / truncate on disk
+    corrupt_fraction: float = 0.0
+    truncate_fraction: float = 0.0
+    # fraction of blocks whose FIRST solve attempt sees a matvec fault
+    matvec_nan_fraction: float = 0.0
+    matvec_nan_pairs: int = 1           # batch lanes hit per faulted block
+    matvec_nan_value: float = float("nan")
+    fault_start: int = 2                # iteration window of the fault
+    fault_stop: int = 3
+    # fraction of blocks whose FIRST attempt runs with a forced-negative
+    # SPD margin (kron preconditioner certificate failure)
+    cert_fail_fraction: float = 0.0
+    cert_margin: float = -2.0           # |margin| >= 1 => indefinite M^-1
+    # attempts the injection applies to: attempt < transient_attempts.
+    # 1 (default) = transient (first attempt only — same-rung retry is
+    # clean, preserving bitwise identity); a large value makes the fault
+    # persistent, forcing ladder ESCALATION instead of retry recovery.
+    transient_attempts: int = 1
+
+
+class FaultInjector:
+    """Runtime arm of a :class:`FaultPlan`, threaded into
+    :class:`~repro.distributed.gram.GramDriver` (``faults=``).
+
+    The driver calls three hooks; each is deterministic in
+    (plan.seed, block_id) so restarts replay identically:
+
+    * :meth:`block_fault` / :meth:`block_spd_margin` — solve-time
+      injections for a block attempt;
+    * :meth:`after_block_saved` — storage abuse (corrupt/truncate the
+      just-written chunk) and the mid-build kill.
+
+    ``armed=False`` turns every hook into a no-op (the clean control arm
+    of the benchmark, and the state after a campaign decides it has
+    injected enough).
+    """
+
+    def __init__(self, plan: FaultPlan, armed: bool = True):
+        self.plan = plan
+        self.armed = armed
+        self.saves_this_run = 0
+        self.kill_armed = plan.kill_after_blocks is not None
+        # ledger of everything injected, for test/benchmark accounting
+        self.log: list[dict] = []
+
+    # -- solve-time seams -------------------------------------------------
+    def block_fault(self, block_id: int, attempt: int) -> MatvecFault | None:
+        """Matvec corruption for (block, attempt), or None. Applies to
+        attempts < plan.transient_attempts, so the default is a
+        TRANSIENT fault: the guards flag it, the driver's same-rung
+        retry recomputes the block clean."""
+        p = self.plan
+        if not self.armed or attempt >= p.transient_attempts or \
+                _hash01(p.seed, int(block_id), "nan") >= \
+                p.matvec_nan_fraction:
+            return None
+        lanes = tuple(range(p.matvec_nan_pairs))
+        self.log.append({"kind": "matvec_nan", "block": int(block_id),
+                         "attempt": attempt, "pairs": list(lanes)})
+        return MatvecFault(pairs=lanes, start=p.fault_start,
+                           stop=p.fault_stop, value=p.matvec_nan_value)
+
+    def block_spd_margin(self, block_id: int, attempt: int,
+                         precond: str) -> float | None:
+        """Forced-negative SPD margin for (block, attempt) — only
+        meaningful when the attempt actually solves with the kron
+        preconditioner (a jacobi rung has no certificate to fail)."""
+        p = self.plan
+        if not self.armed or precond != "kron" or \
+                attempt >= p.transient_attempts or \
+                _hash01(p.seed, int(block_id), "cert") >= \
+                p.cert_fail_fraction:
+            return None
+        self.log.append({"kind": "cert_fail", "block": int(block_id),
+                         "attempt": attempt, "margin": p.cert_margin})
+        return p.cert_margin
+
+    # -- storage / liveness seams ----------------------------------------
+    def after_block_saved(self, store, block_id: int) -> None:
+        """Called by the driver right after a successful save_block.
+        Abuses the chunk bytes on disk per the plan, then possibly
+        kills the driver. Corruption happens BEFORE the kill check so a
+        killed run leaves corrupt chunks behind for the restart to
+        discover — the nastiest ordering."""
+        if not self.armed:
+            return
+        p = self.plan
+        path = store.block_path(block_id)
+        if _hash01(p.seed, int(block_id), "corrupt") < p.corrupt_fraction:
+            self._flip_byte(path)
+            self.log.append({"kind": "corrupt", "block": int(block_id)})
+        elif _hash01(p.seed, int(block_id), "trunc") < \
+                p.truncate_fraction:
+            self._truncate(path)
+            self.log.append({"kind": "truncate", "block": int(block_id)})
+        self.saves_this_run += 1
+        if self.kill_armed and p.kill_after_blocks is not None and \
+                self.saves_this_run >= p.kill_after_blocks:
+            self.kill_armed = False
+            self.log.append({"kind": "kill", "after_block": int(block_id)})
+            raise DriverKilled(
+                f"injected driver kill after {self.saves_this_run} "
+                f"blocks (block {block_id} saved)")
+
+    @staticmethod
+    def _flip_byte(path: str) -> None:
+        try:
+            with open(path, "r+b") as f:
+                f.seek(0, os.SEEK_END)
+                size = f.tell()
+                if size == 0:
+                    return
+                f.seek(size // 2)
+                b = f.read(1)
+                f.seek(size // 2)
+                f.write(bytes([b[0] ^ 0xFF]) if b else b"\xff")
+        except OSError:
+            pass
+
+    @staticmethod
+    def _truncate(path: str) -> None:
+        try:
+            size = os.path.getsize(path)
+            with open(path, "r+b") as f:
+                f.truncate(size // 2)
+        except OSError:
+            pass
+
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for rec in self.log:
+            out[rec["kind"]] = out.get(rec["kind"], 0) + 1
+        return out
+
+
+def run_campaign(driver_factory, plan: FaultPlan, *,
+                 max_restarts: int = 20):
+    """Drive a Gram build to completion through a fault campaign.
+
+    ``driver_factory(injector)`` must return a FRESH
+    :class:`~repro.distributed.gram.GramDriver` wired to the SAME
+    ChunkStore each time (a restarted driver process). The loop runs the
+    driver, catches each injected :class:`DriverKilled`, and restarts —
+    exactly the operational story: crash, restart against the store,
+    recompute only what's missing.
+
+    Returns ``(K, report)`` — the assembled Gram matrix and a dict with
+    the injection ledger, restart count, and the final driver's health
+    record (retries/escalations/quarantines), which tests and
+    ``benchmarks/faults_bench.py`` reconcile against a fault-free run.
+    """
+    injector = FaultInjector(plan)
+    restarts = 0
+    while True:
+        injector.saves_this_run = 0
+        driver = driver_factory(injector)
+        try:
+            K = driver.run()
+            break
+        except DriverKilled:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+    report = {
+        "restarts": restarts,
+        "injections": injector.counts(),
+        "injection_log": list(injector.log),
+        "health": dict(getattr(driver, "health", {}) or {}),
+    }
+    return K, report

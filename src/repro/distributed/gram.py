@@ -13,10 +13,24 @@ Fault tolerance: the driver walks a SchedulePlan, persists every finished
 PairBlock to a ChunkStore (atomic, CRC, first-writer-wins) and on restart
 recomputes only missing blocks. Elasticity: replan() on the remaining
 blocks whenever the device count changes between rounds.
+
+Self-healing (DESIGN.md §10.2): every block's solve is health-checked
+against the per-pair PCG status flags (core/pcg.py), and an unhealthy
+block walks a DEGRADATION LADDER — same-rung retries first (transient
+faults recompute clean, preserving bitwise identity with a fault-free
+run), then cumulative escalation kron→jacobi preconditioner, bf16→f32
+packs, segmented→lockstep PCG, and finally the dense numpy reference
+oracle per pair. Pairs still broken after the last rung are QUARANTINED:
+dropped from the saved block, listed in the manifest record and in
+``GramDriver.health`` — never a silent NaN in the Gram. Chunks whose CRC
+fails on restore are quarantined-and-recomputed the same way, and
+repeatedly failing buckets are deprioritized on replanning
+(distributed/scheduler.py failures knob).
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Callable, Iterable
 
 import numpy as np
@@ -28,9 +42,23 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.base_kernels import BaseKernel, Constant
 from repro.core.graph import GraphBatch
 from repro.core.mgk import MGKResult, mgk_pairs, mgk_pairs_sparse
+from repro.core.pcg import PCG_BREAKDOWN, PCG_DIVERGENCE, PCG_MAX_ITER, \
+    PCG_NONFINITE, PCG_RESTARTED, PCG_STAGNATION
 from repro.data.loader import BucketedDataset, PairBlock, pair_blocks
 from .checkpoint import ChunkStore
 from .scheduler import SchedulePlan, make_plan, replan
+
+logger = logging.getLogger(__name__)
+
+# status bits that flag a pair's solve as UNHEALTHY for the degradation
+# ladder: any detected anomaly, including a recovered restart — a
+# restarted trajectory differs from the clean one, so the block is
+# retried at the same rung to reproduce the fault-free result bit-for-
+# bit. MAX_ITER alone is NOT here: a merely-slow pair is surfaced via
+# the non-convergence summary, not escalated (escalating it would churn
+# without a defect to heal).
+_UNHEALTHY = (PCG_BREAKDOWN | PCG_NONFINITE | PCG_STAGNATION
+              | PCG_DIVERGENCE | PCG_RESTARTED)
 
 __all__ = ["gram_pair_step", "solve_pair_block", "GramDriver",
            "GraphPackCache", "pair_shardings"]
@@ -266,7 +294,7 @@ def pair_shardings(mesh: Mesh) -> tuple:
         n_nodes=ns(b),
     )
     out_shard = MGKResult(values=ns(b), iterations=ns(b), converged=ns(b),
-                          nodal=None)
+                          nodal=None, status=ns(b))
     return (g1_shard, g2_shard), out_shard
 
 
@@ -313,8 +341,17 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
                    with_grad: bool = False,
                    precond: str = "jacobi",
                    kron_rank: int = 2,
-                   pack_dtype=None) -> Callable:
+                   pack_dtype=None,
+                   guard=True) -> Callable:
     """Build the pair-solve step for a mesh.
+
+    ``guard`` (GuardSpec | bool) enables the per-pair PCG numerical
+    guards (core/pcg.py); results then carry the [B] ``status`` bitmask
+    the driver's degradation ladder keys on. Every returned step also
+    accepts per-call ``fault=``/``spd_margin=`` keywords — the
+    deterministic injection seams (distributed/faults.py) — except the
+    gradient steps, whose adjoint path has no injection seam (the
+    ladder never injects into ``run_with_grad``).
 
     ``precond="kron"`` solves every block (forward and, under
     ``with_grad``, adjoint) with the Kronecker-factored approximate
@@ -477,7 +514,8 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
                 vals, grads, sol = fn.value_and_pair_grads(theta,
                                                            with_aux=True)
                 res = MGKResult(values=vals, iterations=sol.iterations,
-                                converged=sol.converged, nodal=None)
+                                converged=sol.converged, nodal=None,
+                                status=sol.status)
                 return res, flatten_grads(grads)
 
             grad_sparse_step.pack_cache = cache
@@ -487,7 +525,8 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
             return grad_sparse_step
 
         def sparse_step(g1: GraphBatch, g2: GraphBatch,
-                        rows=None, cols=None) -> MGKResult:
+                        rows=None, cols=None, fault=None,
+                        spd_margin=None) -> MGKResult:
             p1, p2, block_mode, gt, facs = _block_packs(g1, g2,
                                                         rows, cols)
             f1, f2 = facs
@@ -497,17 +536,21 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
                     sparse_mode=block_mode, tol=tol, max_iter=max_iter,
                     segment_size=segment_size, pad_multiple=segment_pad,
                     pcg_variant=pcg_variant, gram_tile=gt,
-                    factors1=f1, factors2=f2, **precond_kw)
+                    factors1=f1, factors2=f2, guard=guard, fault=fault,
+                    spd_margin=spd_margin, **precond_kw)
             else:
                 res = mgk_pairs_sparse(g1, g2, p1, p2, vertex_kernel,
                                        edge_kernel,
                                        sparse_mode=block_mode,
                                        gram_tile=gt, factors1=f1,
-                                       factors2=f2, **solve_kw,
-                                       **precond_kw)
+                                       factors2=f2, guard=guard,
+                                       fault=fault,
+                                       spd_margin=spd_margin,
+                                       **solve_kw, **precond_kw)
             return MGKResult(values=res.values, iterations=res.iterations,
                              converged=res.converged, nodal=None,
-                             matvec_pairs=res.matvec_pairs)
+                             matvec_pairs=res.matvec_pairs,
+                             status=res.status)
 
         sparse_step.pack_cache = cache
         sparse_step.wants_indices = True
@@ -525,7 +568,8 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
             vals, grads, sol = fn.value_and_pair_grads(theta,
                                                        with_aux=True)
             res = MGKResult(values=vals, iterations=sol.iterations,
-                            converged=sol.converged, nodal=None)
+                            converged=sol.converged, nodal=None,
+                            status=sol.status)
             return res, flatten_grads(grads)
 
         grad_step.with_grad = True
@@ -535,11 +579,30 @@ def gram_pair_step(mesh: Mesh, vertex_kernel: BaseKernel,
 
     def step(g1: GraphBatch, g2: GraphBatch) -> MGKResult:
         res = mgk_pairs(g1, g2, vertex_kernel, edge_kernel, method=method,
+                        guard=guard, **solve_kw, **precond_kw)
+        return MGKResult(values=res.values, iterations=res.iterations,
+                         converged=res.converged, nodal=None,
+                         status=res.status)
+
+    jstep = jax.jit(step, in_shardings=(g1_s, g2_s), out_shardings=out_s)
+
+    def dense_step(g1: GraphBatch, g2: GraphBatch, fault=None,
+                   spd_margin=None) -> MGKResult:
+        # clean calls take the jitted sharded step (one trace for the
+        # whole build); an injected call routes around it — faults are
+        # static jit arguments, so threading them through jstep would
+        # retrace per distinct fault AND leak the fault into the cached
+        # clean trace's key space
+        if fault is None and spd_margin is None:
+            return jstep(g1, g2)
+        res = mgk_pairs(g1, g2, vertex_kernel, edge_kernel, method=method,
+                        guard=guard, fault=fault, spd_margin=spd_margin,
                         **solve_kw, **precond_kw)
         return MGKResult(values=res.values, iterations=res.iterations,
-                         converged=res.converged, nodal=None)
+                         converged=res.converged, nodal=None,
+                         status=res.status)
 
-    return jax.jit(step, in_shardings=(g1_s, g2_s), out_shardings=out_s)
+    return dense_step
 
 
 def _pad_batch(gb: GraphBatch, to: int) -> GraphBatch:
@@ -567,8 +630,12 @@ def _pad_batch(gb: GraphBatch, to: int) -> GraphBatch:
 
 
 def solve_pair_block(ds: BucketedDataset, block: PairBlock, step: Callable,
-                     pair_width: int) -> dict[str, np.ndarray]:
-    """Run one PairBlock through the sharded step; returns host arrays."""
+                     pair_width: int, fault=None,
+                     spd_margin=None) -> dict[str, np.ndarray]:
+    """Run one PairBlock through the sharded step; returns host arrays.
+
+    ``fault``/``spd_margin`` forward to the step's injection seams
+    (only passed when set — gradient steps don't take them)."""
     g1 = ds.batch(block.rows, pad_to=block.pad_row)
     g2 = ds.batch(block.cols, pad_to=block.pad_col)
     B = block.n_pairs
@@ -576,13 +643,18 @@ def solve_pair_block(ds: BucketedDataset, block: PairBlock, step: Callable,
     # pair-axis sharding to pad for — dummy pairs would break it)
     to = B if getattr(step, "no_pair_pad", False) \
         else -(-B // pair_width) * pair_width
+    kw = {}
+    if fault is not None:
+        kw["fault"] = fault
+    if spd_margin is not None:
+        kw["spd_margin"] = spd_margin
     if getattr(step, "wants_indices", False):
         # pack-caching sparse step: keyed by dataset index (dummy pairs
         # appended by _pad_batch key as -1 inside the cache)
         res = step(_pad_batch(g1, to), _pad_batch(g2, to),
-                   rows=block.rows, cols=block.cols)
+                   rows=block.rows, cols=block.cols, **kw)
     else:
-        res = step(_pad_batch(g1, to), _pad_batch(g2, to))
+        res = step(_pad_batch(g1, to), _pad_batch(g2, to), **kw)
     grads = None
     if getattr(step, "with_grad", False):
         res, grads = res
@@ -592,6 +664,8 @@ def solve_pair_block(ds: BucketedDataset, block: PairBlock, step: Callable,
         "values": np.asarray(res.values)[:B],
         "iterations": np.asarray(res.iterations)[:B],
     }
+    if res.status is not None:
+        out["status"] = np.asarray(res.status)[:B]
     if grads is not None:
         # ∂K/∂θ blocks ride along as extra arrays, one per flat key
         out.update({f"grad_{k}": np.asarray(v)[:B]
@@ -616,6 +690,20 @@ class GramDriver:
     sparsity (pack-cache octile
     stats) and observed per-pair CG iteration counts (finished blocks in
     the store) back into the scheduler's cost model.
+
+    SELF-HEALING (module docstring; DESIGN.md §10.2): with ``guard``
+    on (default), each block's per-pair PCG status is health-checked and
+    an unhealthy block walks :meth:`_ladder` — ``max_block_retries``
+    same-rung retries, then cumulative escalation down to the dense
+    reference oracle; pairs broken on the last rung are quarantined
+    (dropped from the block, recorded in the manifest ``meta`` and in
+    ``self.health``). ``faults`` takes a
+    :class:`~repro.distributed.faults.FaultInjector` whose hooks the
+    driver calls at the two seams (solve-time, post-save) — None in
+    production. After a run, ``self.health`` holds retry/escalation
+    counters, the quarantined (i, j) list, a per-block recovery trail,
+    and the per-bucket count of pairs that hit max_iter without
+    reaching tol (also journaled via ``store.note`` and logged).
     """
     ds: BucketedDataset
     mesh: Mesh
@@ -639,13 +727,24 @@ class GramDriver:
     kron_rank: int = 2                     # Kronecker terms, 1 or 2
     pack_dtype: object = None              # e.g. jnp.bfloat16 (§9.4)
     normalize: bool = True
+    guard: object = True                   # GuardSpec | bool (§10.1)
+    faults: object = None                  # FaultInjector | None (§10.4)
+    max_block_retries: int = 1             # same-rung retries per rung
 
     def __post_init__(self):
         self._pack_cache = None   # set by _run (the step's cache)
         self._iter_stats: dict[int, float] = {}  # block id -> mean iters
+        self._step_cache: dict = {}   # (with_grad, overrides) -> step
+        self._block_failures: dict[int, int] = {}
+        self.health: dict = self._fresh_health()
         if self.gram_tile and self.method != "pallas_sparse":
             raise ValueError(
                 "gram_tile execution needs method='pallas_sparse'")
+
+    @staticmethod
+    def _fresh_health() -> dict:
+        return {"retries": 0, "escalations": 0, "quarantined_pairs": [],
+                "blocks": {}, "nonconverged_by_bucket": {}}
 
     def blocks(self) -> list[PairBlock]:
         if self.gram_tile:
@@ -661,7 +760,31 @@ class GramDriver:
         return replan(blocks, done, n_groups,
                       densities=self._block_densities(blocks),
                       iters=self._block_iters(blocks, done),
-                      precond=self.precond)
+                      precond=self.precond,
+                      failures=self._failure_map(blocks))
+
+    def _failure_map(self, blocks) -> dict[int, int] | None:
+        """Observed solve-failure counts expanded BUCKET-wise for the
+        scheduler: a failing pair usually indicts its bucket's
+        conditioning (graph sizes / label distribution), so every block
+        of that bucket pair is deprioritized, direct failures keeping
+        their own (higher) counts."""
+        if not self._block_failures:
+            return None
+        by_id = {b.block_id: b for b in blocks}
+        by_bucket: dict[tuple, int] = {}
+        for bid, cnt in self._block_failures.items():
+            blk = by_id.get(bid)
+            if blk is not None:
+                key = (blk.bucket_row, blk.bucket_col)
+                by_bucket[key] = max(by_bucket.get(key, 0), cnt)
+        out = {}
+        for b in blocks:
+            cnt = by_bucket.get((b.bucket_row, b.bucket_col), 0)
+            cnt = max(cnt, self._block_failures.get(b.block_id, 0))
+            if cnt:
+                out[b.block_id] = cnt
+        return out or None
 
     def _block_densities(self, blocks) -> dict[int, float] | None:
         """Measured per-block octile occupancy from the pack cache's
@@ -702,8 +825,12 @@ class GramDriver:
             # once per driver even across repeated plan()/replan calls
             mean_it = self._iter_stats.get(bid)
             if mean_it is None:
-                mean_it = float(np.mean(
-                    self.store.load_block(bid)["iterations"]))
+                # planning must survive a corrupt chunk: quarantine it
+                # (the run loop recomputes) instead of aborting the plan
+                rec = self.store.load_block(bid, on_error="quarantine")
+                if rec is None or len(rec["iterations"]) == 0:
+                    continue
+                mean_it = float(np.mean(rec["iterations"]))
                 self._iter_stats[bid] = mean_it
             per_bucket.setdefault(
                 (blk.bucket_row, blk.bucket_col), []).append(mean_it)
@@ -721,6 +848,180 @@ class GramDriver:
             if a != "model":
                 w *= s
         return w
+
+    # -- degradation ladder (DESIGN.md §10.2) -----------------------------
+    def _ladder(self, with_grad: bool) -> list[tuple[str, dict | None]]:
+        """Ordered (name, CUMULATIVE overrides) rungs; ``None`` overrides
+        = the dense numpy reference oracle. Rungs only exist for features
+        the driver actually uses (a jacobi/f32/lockstep build starts at
+        its own floor). ``run_with_grad`` stops before the oracle — the
+        reference path has no hyperparameter gradients, and a gradient
+        Gram with silently missing ∂K/∂θ entries would be worse than a
+        quarantined pair."""
+        rungs: list[tuple[str, dict | None]] = [("base", {})]
+        cum: dict = {}
+        if self.precond != "jacobi":
+            cum = dict(cum, precond="jacobi")
+            rungs.append(("jacobi-precond", dict(cum)))
+        if self.pack_dtype is not None:
+            cum = dict(cum, pack_dtype=None)
+            rungs.append(("f32-packs", dict(cum)))
+        if self.segment_size is not None and not with_grad:
+            cum = dict(cum, segment_size=None)
+            rungs.append(("lockstep-pcg", dict(cum)))
+        if not with_grad:
+            rungs.append(("reference", None))
+        return rungs
+
+    def _build_step(self, with_grad: bool, overrides: dict) -> Callable:
+        """The pair-solve step for one ladder rung, cached per
+        (with_grad, overrides) — rung steps (and their jit traces /
+        pack caches) build once per driver, not once per sick block."""
+        key = (with_grad, tuple(sorted(overrides.items())))
+        step = self._step_cache.get(key)
+        if step is None:
+            cfg = dict(method=self.method, tol=self.tol,
+                       max_iter=self.max_iter,
+                       fixed_iters=self.fixed_iters,
+                       pcg_variant=self.pcg_variant,
+                       sparse_mode=self.sparse_mode, tile=self.tile,
+                       gram_tile=self.gram_tile,
+                       segment_size=self.segment_size,
+                       segment_pad=self.segment_pad,
+                       pack_cache_entries=self.pack_cache_entries,
+                       with_grad=with_grad, precond=self.precond,
+                       kron_rank=self.kron_rank,
+                       pack_dtype=self.pack_dtype, guard=self.guard)
+            cfg.update(overrides)
+            step = gram_pair_step(self.mesh, self.vertex_kernel,
+                                  self.edge_kernel, **cfg)
+            self._step_cache[key] = step
+        return step
+
+    @staticmethod
+    def _bad_pairs(out: dict) -> np.ndarray:
+        """[B] bool: pairs whose solve is unhealthy — non-finite value,
+        or any _UNHEALTHY status bit (guards tripped / restart taken)."""
+        bad = ~np.isfinite(np.asarray(out["values"], np.float64))
+        status = out.get("status")
+        if status is not None:
+            bad |= (np.asarray(status) & _UNHEALTHY) != 0
+        return bad
+
+    def _reference_block(self, block: PairBlock) -> dict:
+        """Final ladder rung: the dense numpy direct solve
+        (core/reference.py) pair by pair — no Pallas, no PCG, no
+        preconditioner; slow but assumption-free."""
+        from repro.core.reference import mgk_direct
+        rows = np.asarray(block.rows)
+        cols = np.asarray(block.cols)
+        vals = np.empty(len(rows), np.float64)
+        for k, (r, c) in enumerate(zip(rows, cols)):
+            try:
+                vals[k] = mgk_direct(self.ds.graphs[int(r)],
+                                     self.ds.graphs[int(c)],
+                                     self.vertex_kernel, self.edge_kernel)
+            except np.linalg.LinAlgError:
+                vals[k] = np.nan    # truly singular pair -> quarantine
+        return {"rows": rows, "cols": cols, "values": vals,
+                "iterations": np.zeros(len(rows), np.int32),
+                "status": np.zeros(len(rows), np.int32)}
+
+    def _solve_block_healed(self, block: PairBlock, with_grad: bool,
+                            width: int) -> tuple[dict, dict | None]:
+        """Solve one block through the degradation ladder.
+
+        Returns ``(out, meta)``: the (possibly pair-filtered) block
+        arrays and a JSON-serializable health record for the manifest —
+        None when the first attempt came back clean (the ~always case).
+        A transient fault is healed by the same-rung retry recomputing
+        the block on a clean trajectory, so the saved arrays are
+        BITWISE-IDENTICAL to a fault-free run's; only escalation (a
+        persistent defect) changes numerics, and only quarantine drops
+        pairs — both recorded, never silent."""
+        bid = block.block_id
+        inj = self.faults if (self.faults is not None
+                              and not with_grad) else None
+        trail: list[dict] = []
+        attempt = 0
+        out = None
+        for rung_idx, (rung_name, overrides) in enumerate(
+                self._ladder(with_grad)):
+            if rung_idx > 0:
+                self.health["escalations"] += 1
+            # the oracle is deterministic — retrying it verbatim is pure
+            # waste, so it gets exactly one attempt
+            tries = 1 if overrides is None else self.max_block_retries + 1
+            for retry in range(tries):
+                if retry > 0:
+                    self.health["retries"] += 1
+                if overrides is None:
+                    out = self._reference_block(block)
+                else:
+                    step = self._build_step(with_grad, overrides)
+                    fault = inj.block_fault(bid, attempt) if inj else None
+                    margin = inj.block_spd_margin(
+                        bid, attempt,
+                        overrides.get("precond", self.precond)) \
+                        if inj else None
+                    out = solve_pair_block(self.ds, block, step, width,
+                                           fault=fault, spd_margin=margin)
+                attempt += 1
+                bad = self._bad_pairs(out)
+                if not bad.any():
+                    meta = {"recovery": trail} if trail else None
+                    return out, meta
+                trail.append({"rung": rung_name, "attempt": attempt - 1,
+                              "bad_pairs": int(bad.sum())})
+                self._block_failures[bid] = \
+                    self._block_failures.get(bid, 0) + 1
+        # ladder exhausted: quarantine the poison pairs — exclude them
+        # from the block (and hence the Gram) and account for every one
+        bad = self._bad_pairs(out)
+        keep = ~bad
+        qpairs = [[int(r), int(c)] for r, c
+                  in zip(np.asarray(out["rows"])[bad],
+                         np.asarray(out["cols"])[bad])]
+        out = {k: np.asarray(v)[keep] for k, v in out.items()}
+        self.health["quarantined_pairs"].extend(qpairs)
+        logger.warning(
+            "block %d: quarantined %d pair(s) after exhausting the "
+            "degradation ladder: %s", bid, len(qpairs), qpairs)
+        return out, {"recovery": trail, "quarantined_pairs": qpairs}
+
+    def _nonconvergence_summary(self, results: dict[int, dict],
+                                by_id: dict) -> None:
+        """Tally pairs that ran to max_iter without reaching tol
+        (PCG_MAX_ITER without a guard cause — slow, not sick) per bucket
+        pair; surface via health, log, and the manifest journal.
+        Satellite of DESIGN.md §10: slow convergence must be VISIBLE
+        (it skews the cost model and hints at conditioning trouble) but
+        is not escalated — the values are finite and sane."""
+        per_bucket: dict[str, int] = {}
+        for bid, rec in results.items():
+            status = rec.get("status")
+            if status is None:
+                continue
+            n_slow = int(((np.asarray(status) & PCG_MAX_ITER) != 0).sum())
+            if not n_slow:
+                continue
+            blk = by_id.get(bid)
+            key = f"{blk.bucket_row}x{blk.bucket_col}" if blk is not None \
+                else f"block{bid}"
+            per_bucket[key] = per_bucket.get(key, 0) + n_slow
+        if not per_bucket:
+            return
+        self.health["nonconverged_by_bucket"] = per_bucket
+        logger.warning(
+            "%d pair(s) hit max_iter=%d without reaching tol=%g "
+            "(per bucket pair: %s) — consider raising max_iter or "
+            "loosening tol for these buckets",
+            sum(per_bucket.values()), self.max_iter, self.tol,
+            per_bucket)
+        if self.store:
+            self.store.note(kind="nonconvergence", buckets=per_bucket,
+                            max_iter=int(self.max_iter),
+                            tol=float(self.tol))
 
     def run(self, progress: Callable[[int, int], None] | None = None
             ) -> np.ndarray:
@@ -742,21 +1043,8 @@ class GramDriver:
         return self._run(progress, with_grad=True)
 
     def _run(self, progress, with_grad: bool):
-        step = gram_pair_step(self.mesh, self.vertex_kernel,
-                              self.edge_kernel, method=self.method,
-                              tol=self.tol, max_iter=self.max_iter,
-                              fixed_iters=self.fixed_iters,
-                              pcg_variant=self.pcg_variant,
-                              sparse_mode=self.sparse_mode,
-                              tile=self.tile,
-                              gram_tile=self.gram_tile,
-                              segment_size=self.segment_size,
-                              segment_pad=self.segment_pad,
-                              pack_cache_entries=self.pack_cache_entries,
-                              with_grad=with_grad,
-                              precond=self.precond,
-                              kron_rank=self.kron_rank,
-                              pack_dtype=self.pack_dtype)
+        self.health = self._fresh_health()
+        step = self._build_step(with_grad, {})
         self._pack_cache = getattr(step, "pack_cache", None)
         blocks = self.blocks()
         by_id = {b.block_id: b for b in blocks}
@@ -764,18 +1052,54 @@ class GramDriver:
         todo = [b.block_id for b in blocks if b.block_id not in done]
         width = self._pair_width()
         results: dict[int, dict] = {}
-        for i, bid in enumerate(todo):
-            out = solve_pair_block(self.ds, by_id[bid], step, width)
+        pending = list(todo)
+        n_done = 0
+        while pending:
+            bid = pending.pop(0)
+            out, meta = self._solve_block_healed(by_id[bid], with_grad,
+                                                 width)
+            if meta:
+                self.health["blocks"][bid] = meta
             if self.store:
-                self.store.save_block(bid, **out)
+                self.store.save_block(bid, meta=meta, **out)
+                if self.faults is not None:
+                    # injection seam: may corrupt the chunk on disk
+                    # and/or raise DriverKilled (mid-build crash)
+                    self.faults.after_block_saved(self.store, bid)
             else:
                 results[bid] = out
+            n_done += 1
             if progress:
-                progress(i + 1, len(todo))
+                progress(n_done, len(todo))
+            if meta and pending and self._block_failures.get(bid):
+                # deprioritize blocks sharing a failing bucket pair so
+                # healthy work lands first (mirrors plan()'s failures
+                # feedback for the in-order walk)
+                fmap = self._failure_map(
+                    [by_id[b] for b in pending]) or {}
+                pending.sort(key=lambda b: fmap.get(b, 0))
         n = len(self.ds)
         if self.store:
-            results = {bid: self.store.load_block(bid)
-                       for bid in self.store.done_blocks()}
+            # restore every completed block, quarantining (instead of
+            # aborting on) chunks whose CRC no longer matches — then
+            # recompute exactly the quarantined/missing ones. The
+            # recompute saves WITHOUT the after_block_saved fault seam:
+            # a deterministic corruption fault would otherwise re-abuse
+            # the same block forever.
+            results = {}
+            for bid in sorted(self.store.done_blocks()):
+                rec = self.store.load_block(bid, on_error="quarantine")
+                if rec is not None:
+                    results[bid] = dict(rec)
+            missing = [b.block_id for b in blocks
+                       if b.block_id not in results]
+            for bid in missing:
+                out, meta = self._solve_block_healed(by_id[bid],
+                                                     with_grad, width)
+                if meta:
+                    self.health["blocks"][bid] = meta
+                self.store.save_block(bid, meta=meta, **out)
+                results[bid] = out
         if with_grad:
             # a store populated by a plain run() has value-only blocks;
             # recompute those in memory (save_block is first-writer-wins,
@@ -793,13 +1117,22 @@ class GramDriver:
                             f" is not part of the current block plan"
                             f" (pairs_per_block changed?) — rerun with the"
                             f" original pairs_per_block or a fresh store")
-                    results[bid] = solve_pair_block(
-                        self.ds, by_id[bid], step, width)
+                    results[bid], _ = self._solve_block_healed(
+                        by_id[bid], with_grad, width)
+
+        self._nonconvergence_summary(results, by_id)
 
         from .checkpoint import assemble_blocks
 
+        # quarantined pairs leave NaN holes by design: loud (health
+        # record, manifest, warning) but not fatal — downstream can mask
+        # them via np.isnan. With nothing quarantined, a hole is a BUG
+        # and assemble_blocks raises.
+        strict = not self.health["quarantined_pairs"]
+
         def assemble(key):
-            return assemble_blocks(results.values(), n, key)
+            return assemble_blocks(results.values(), n, key,
+                                   strict=strict)
 
         K = assemble("values")
         grads = None

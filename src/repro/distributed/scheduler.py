@@ -77,15 +77,26 @@ def make_plan(blocks: list[PairBlock], n_groups: int,
               densities: dict[int, float] | None = None,
               speculate_tail: float = 0.05,
               iters: dict[int, float] | None = None,
-              precond: str = "jacobi") -> SchedulePlan:
+              precond: str = "jacobi",
+              failures: dict[int, int] | None = None) -> SchedulePlan:
     """LPT greedy placement of blocks onto n_groups device groups.
 
     ``densities``/``iters`` map block ids to measured per-block octile
     occupancy and predicted CG iteration counts (blocks absent from the
     dicts use the :func:`estimate_cost` defaults — the iteration prior
-    keyed on ``precond``)."""
+    keyed on ``precond``).
+
+    ``failures`` maps block ids to observed solve-failure counts (the
+    Gram driver's degradation-ladder feedback, DESIGN.md §10.2): a
+    failing block likely retries or escalates to slower rungs, so (a) it
+    is DEPRIORITIZED — demoted to the tail of its group's queue, ordered
+    by failure count, so healthy work lands first and a poison bucket
+    can't starve the fleet — and (b) it is EXCLUDED from straggler
+    speculation (mirroring a block that fails deterministically just
+    fails twice)."""
     densities = densities or {}
     iters = iters or {}
+    failures = failures or {}
     costs = np.array([estimate_cost(b, densities.get(b.block_id, 1.0),
                                     iters.get(b.block_id),
                                     precond=precond)
@@ -97,6 +108,13 @@ def make_plan(blocks: list[PairBlock], n_groups: int,
         g = int(np.argmin(loads))
         queues[g].append(blocks[int(k)].block_id)
         loads[g] += costs[k]
+    # demote failing blocks to the queue tail (stable within each class)
+    if failures:
+        queues = [
+            [bid for bid in q if not failures.get(bid)]
+            + sorted((bid for bid in q if failures.get(bid)),
+                     key=lambda bid: failures[bid])
+            for q in queues]
     # straggler speculation: mirror each group's tail onto the least-loaded
     # *other* group
     spec: list[list[int]] = [[] for _ in range(n_groups)]
@@ -104,6 +122,8 @@ def make_plan(blocks: list[PairBlock], n_groups: int,
         for g, q in enumerate(queues):
             n_tail = max(1, int(len(q) * speculate_tail)) if q else 0
             for bid in q[-n_tail:]:
+                if failures.get(bid):
+                    continue    # don't mirror deterministic failures
                 others = [(loads[h], h) for h in range(n_groups) if h != g]
                 _, h = min(others)
                 spec[h].append(bid)
@@ -118,9 +138,11 @@ def make_plan(blocks: list[PairBlock], n_groups: int,
 def replan(blocks: list[PairBlock], done_ids: set[int], n_groups: int,
            densities: dict[int, float] | None = None,
            iters: dict[int, float] | None = None,
-           precond: str = "jacobi") -> SchedulePlan:
+           precond: str = "jacobi",
+           failures: dict[int, int] | None = None) -> SchedulePlan:
     """Elastic re-planning: schedule only the not-yet-done blocks for the
-    *current* group count. Deterministic given (blocks, done, n_groups)."""
+    *current* group count. Deterministic given (blocks, done, n_groups,
+    failures)."""
     remaining = [b for b in blocks if b.block_id not in done_ids]
     return make_plan(remaining, n_groups, densities, iters=iters,
-                     precond=precond)
+                     precond=precond, failures=failures)

@@ -29,3 +29,20 @@ except ImportError:
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """Release compiled executables after each test module.
+
+    The whole tier-1 suite runs in ONE process; every module compiles
+    its own large family of jitted solves (distinct closures, so nothing
+    is shared across modules anyway) and the CPU client keeps all of
+    them alive. Past a few hundred executables the accumulated JIT code
+    can crash a later XLA compile outright, so bound the live set to one
+    module's worth.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()

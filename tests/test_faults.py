@@ -1,0 +1,277 @@
+"""Self-healing Gram builds under the deterministic fault harness:
+campaign bitwise-identity, crash/restart, quarantine-and-recompute,
+degradation-ladder escalation, journal robustness (DESIGN.md §10)."""
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+import jax
+from jax.sharding import Mesh
+from _hypothesis_compat import given, settings, st
+
+from repro.core import KroneckerDelta, SquareExponential
+from repro.data import bucket_graphs, make_drugbank_like_dataset
+from repro.distributed import ChunkStore, FaultInjector, FaultPlan, \
+    GramDriver, assemble_blocks, run_campaign
+from repro.distributed.faults import _hash01
+
+VK = KroneckerDelta(0.5, n_labels=8)
+EK = SquareExponential(1.0, rank=10)
+
+
+def _dataset(n=8, seed=7):
+    gs = [g for g in make_drugbank_like_dataset(n + 6, seed=seed)
+          if g.n_nodes >= 4][:n]
+    return bucket_graphs(gs, max_buckets=3)
+
+
+def _mesh():
+    return Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+
+
+def _driver(ds, store, injector=None, **kw):
+    kw.setdefault("method", "pallas_sparse")
+    kw.setdefault("pairs_per_block", 8)
+    return GramDriver(ds, _mesh(), VK, EK, store=store, faults=injector,
+                      **kw)
+
+
+def _journal_ops(root):
+    ops = []
+    with open(os.path.join(root, "manifest.jsonl")) as f:
+        for line in f:
+            if line.strip():
+                ops.append(json.loads(line))
+    return ops
+
+
+def test_hash01_deterministic():
+    a = _hash01(3, 17, "nan")
+    assert a == _hash01(3, 17, "nan")
+    assert 0.0 <= a < 1.0
+    assert _hash01(3, 17, "nan") != _hash01(3, 18, "nan")
+    assert _hash01(3, 17, "nan") != _hash01(3, 17, "cert")
+
+
+def test_campaign_bitwise_identical(tmp_path):
+    """The acceptance campaign: kill + corruption + truncation + matvec
+    NaNs + forced certificate failure, all transient — the healed build
+    must equal the fault-free build BIT FOR BIT, with the interventions
+    accounted for in health/manifest."""
+    ds = _dataset(8)
+    K_clean = _driver(ds, ChunkStore(str(tmp_path / "clean")),
+                      precond="kron").run()
+    plan = FaultPlan(seed=3, kill_after_blocks=3, corrupt_fraction=0.3,
+                     truncate_fraction=0.2, matvec_nan_fraction=0.5,
+                     cert_fail_fraction=0.4)
+    K_fault, report = run_campaign(
+        lambda inj: _driver(ds, ChunkStore(str(tmp_path / "faulty")),
+                            inj, precond="kron"), plan)
+    assert np.array_equal(K_clean, K_fault)
+    assert not np.isnan(K_fault).any()
+    assert report["restarts"] >= 1
+    assert report["injections"].get("matvec_nan", 0) > 0
+    assert report["injections"].get("kill", 0) == 1
+    # every solve-time injection left a recovery trail in the manifest
+    store = ChunkStore(str(tmp_path / "faulty"))
+    recovered = {bid for bid in store.done_blocks()
+                 if "recovery" in (store.block_entry(bid) or {})}
+    assert recovered, "no recovery records despite injections"
+
+
+def test_crash_restart_recomputes_only_missing(tmp_path):
+    """Kill after K blocks, restart against the same store: finished
+    blocks must NOT recompute (exactly one manifest add per block) and
+    the final Gram equals an uninterrupted run's."""
+    ds = _dataset(6)
+    K_ref = _driver(ds, ChunkStore(str(tmp_path / "ref"))).run()
+    plan = FaultPlan(seed=0, kill_after_blocks=2)
+    K, report = run_campaign(
+        lambda inj: _driver(ds, ChunkStore(str(tmp_path / "killed")),
+                            inj), plan)
+    assert report["restarts"] == 1
+    assert np.array_equal(K_ref, K)
+    adds = [op["block"] for op in _journal_ops(str(tmp_path / "killed"))
+            if op.get("op") == "add"]
+    assert sorted(adds) == sorted(set(adds)), \
+        "a finished block was recomputed after restart"
+
+
+def test_corrupt_chunk_quarantined_and_recomputed(tmp_path):
+    """Bit rot after a completed run: the next run detects the CRC
+    mismatch on restore, journals a quarantine tombstone, recomputes
+    just that block, and lands on the identical Gram."""
+    ds = _dataset(6)
+    store_dir = str(tmp_path / "store")
+    K_ref = _driver(ds, ChunkStore(store_dir)).run()
+    path = ChunkStore(store_dir).block_path(0)
+    data = bytearray(open(path, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(path, "wb").write(bytes(data))
+    K = _driver(ds, ChunkStore(store_dir)).run()
+    assert np.array_equal(K_ref, K)
+    ops = _journal_ops(store_dir)
+    assert any(op.get("op") == "quarantine" and op["block"] == 0
+               for op in ops)
+    # the recompute re-added the block with a fresh CRC: loads clean now
+    assert ChunkStore(store_dir).load_block(0) is not None
+
+
+def test_persistent_cert_failure_escalates_to_jacobi(tmp_path):
+    """A PERSISTENT kron-certificate failure can't be healed by
+    retrying — the ladder must escalate to the jacobi rung, whose solve
+    is configuration-identical to a jacobi-from-the-start driver, so
+    the healed Gram matches that driver's bit for bit."""
+    ds = _dataset(6)
+    K_jacobi = _driver(ds, ChunkStore(str(tmp_path / "jac")),
+                       precond="jacobi").run()
+    plan = FaultPlan(seed=5, cert_fail_fraction=1.0,
+                     transient_attempts=10**9)
+    drv = _driver(ds, ChunkStore(str(tmp_path / "healed")),
+                  FaultInjector(plan), precond="kron",
+                  max_block_retries=0)
+    K = drv.run()
+    assert drv.health["escalations"] > 0
+    assert not np.isnan(K).any()
+    assert np.array_equal(K_jacobi, K)
+
+
+def test_poison_pair_quarantined_and_accounted(tmp_path):
+    """A pair that fails every rung INCLUDING the reference oracle is
+    quarantined: excluded from the Gram (NaN hole, loudly warned),
+    listed in driver health and in the block's manifest record — never
+    a silent NaN."""
+    ds = _dataset(5)
+    plan = FaultPlan(seed=1, matvec_nan_fraction=1.0,
+                     transient_attempts=10**9)
+    drv = _driver(ds, ChunkStore(str(tmp_path / "s")),
+                  FaultInjector(plan), max_block_retries=0,
+                  normalize=False)
+    real_ref = drv._reference_block
+
+    def poisoned_ref(block):
+        out = real_ref(block)
+        if block.block_id == 0:
+            out["values"][0] = np.nan   # oracle fails too -> quarantine
+        return out
+
+    drv._reference_block = poisoned_ref
+    with pytest.warns(UserWarning, match="NaN hole"):
+        K = drv.run()
+    qpairs = drv.health["quarantined_pairs"]
+    assert len(qpairs) == 1
+    (i, j), = [tuple(p) for p in qpairs]
+    holes = {tuple(int(v) for v in h) for h in np.argwhere(np.isnan(K))}
+    assert holes == {(i, j), (j, i)}   # sets dedupe the i == j case
+    entry = ChunkStore(str(tmp_path / "s")).block_entry(0)
+    assert [tuple(p) for p in entry["quarantined_pairs"]] == [(i, j)]
+
+
+def test_nonconvergence_surfaced(tmp_path):
+    """Pairs that hit max_iter without reaching tol are counted per
+    bucket in driver health and journaled — not recorded
+    indistinguishably from converged ones, and NOT escalated (slow is
+    not sick)."""
+    ds = _dataset(6)
+    drv = _driver(ds, ChunkStore(str(tmp_path / "s")), max_iter=2,
+                  tol=1e-12)
+    K = drv.run()
+    assert np.isfinite(K).all()
+    assert drv.health["nonconverged_by_bucket"]
+    assert drv.health["escalations"] == 0
+    notes = ChunkStore(str(tmp_path / "s")).notes()
+    assert any(n.get("kind") == "nonconvergence" and n["buckets"]
+               for n in notes)
+
+
+def test_assemble_blocks_strict():
+    blk = {"rows": np.array([0, 0]), "cols": np.array([0, 1]),
+           "values": np.array([1.0, 2.0])}
+    with pytest.raises(ValueError, match="NaN hole"):
+        assemble_blocks([blk], 3, "values")
+    with pytest.warns(UserWarning, match="NaN hole"):
+        M = assemble_blocks([blk], 3, "values", strict=False)
+    assert np.isnan(M[2, 2]) and M[0, 1] == 2.0 and M[1, 0] == 2.0
+
+
+def test_store_reaps_stale_tmps(tmp_path):
+    stray = tmp_path / "block_00000000.npz.tmp.999.deadbeef"
+    stray.write_bytes(b"junk from a crashed writer")
+    ChunkStore(str(tmp_path))
+    assert not stray.exists()
+
+
+def test_atomic_write_cleans_tmp_on_failure(tmp_path, monkeypatch):
+    from repro.distributed.checkpoint import _atomic_write
+    monkeypatch.setattr(os, "rename",
+                        lambda a, b: (_ for _ in ()).throw(OSError("x")))
+    with pytest.raises(OSError):
+        _atomic_write(str(tmp_path / "f.bin"), b"data")
+    monkeypatch.undo()
+    assert list(tmp_path.iterdir()) == []
+
+
+def test_journal_compaction_preserves_state(tmp_path):
+    store = ChunkStore(str(tmp_path))
+    one = dict(rows=np.array([0]), cols=np.array([1]),
+               values=np.array([1.0]), iterations=np.array([3]))
+    for bid in range(4):
+        store.save_block(bid, **one)
+    for _ in range(3):       # churn: quarantine/recompute cycles
+        store.quarantine_block(2, "test churn")
+        store.save_block(2, **one)
+    before = (store.done_blocks(), store.quarantined_blocks())
+    dropped = store.compact_manifest()
+    assert dropped > 0
+    fresh = ChunkStore(str(tmp_path))
+    assert (fresh.done_blocks(), fresh.quarantined_blocks()) == before
+    assert fresh.load_block(2) is not None
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10**6), cut=st.integers(0, 600))
+def test_journal_roundtrip_torn_writes(seed, cut):
+    """Property: whatever op sequence was journaled, a crash truncating
+    the journal at ANY byte leaves a store that (a) opens without error
+    and (b) folds exactly the complete-line prefix under the documented
+    semantics (first add wins; quarantine retires; later add readds)."""
+    rng = np.random.default_rng(seed)
+    one = dict(rows=np.array([0]), cols=np.array([1]),
+               values=np.array([1.0]), iterations=np.array([2]))
+    with tempfile.TemporaryDirectory() as d:
+        store = ChunkStore(d)
+        for k in range(12):
+            op = int(rng.integers(0, 3))
+            bid = int(rng.integers(0, 5))
+            if op == 0:
+                store.save_block(bid, **one)
+            elif op == 1:
+                store.quarantine_block(bid, "torn-test")
+            else:
+                store.note(kind="torn-test", k=k)
+        with open(os.path.join(d, "manifest.jsonl"), "rb") as f:
+            data = f.read()
+        torn = data[:min(cut, len(data))]
+        # independent model of the fold over the complete-line prefix
+        complete = torn[:torn.rfind(b"\n") + 1] if b"\n" in torn else b""
+        done, quar, notes = {}, set(), 0
+        for line in complete.decode().splitlines():
+            rec = json.loads(line)
+            if rec["op"] == "add":
+                if rec["block"] not in done:
+                    done[rec["block"]] = rec["crc"]
+                    quar.discard(rec["block"])
+            elif rec["op"] == "quarantine":
+                done.pop(rec["block"], None)
+                quar.add(rec["block"])
+            else:
+                notes += 1
+        with tempfile.TemporaryDirectory() as d2:
+            with open(os.path.join(d2, "manifest.jsonl"), "wb") as f:
+                f.write(torn)
+            reopened = ChunkStore(d2)
+            assert reopened.done_blocks() == set(done)
+            assert set(reopened.quarantined_blocks()) == quar
+            assert len(reopened.notes()) == notes
